@@ -1,0 +1,167 @@
+"""Multi-core BIC (paper Fig. 4) + the standby-power *policy* on TPU.
+
+The paper deploys Z BIC cores, feeds each a batch from external memory, and
+puts idle cores in standby (CG + RBB).  The TPU translation:
+
+  * "Z cores"            -> Z devices along the ``data`` mesh axis;
+                            ``multicore_create_index`` shard_maps one BIC
+                            pipeline per device over a batch axis.
+  * "standby idle cores" -> the elastic scheduler activates only
+                            ceil(workload / batches_per_core) cores per tick
+                            and accounts the rest at standby power using the
+                            calibrated model (core/power.py).
+  * stragglers           -> longest-processing-time dynamic assignment
+                            (work stealing): batches are handed to the
+                            earliest-finishing core instead of statically
+                            striped, bounding makespan at max(LPT) instead
+                            of max(static stripe x slowest core).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.bic import BICConfig, PaperConfig
+from repro.core import power
+from repro.kernels import ref, ops
+
+
+# ------------------------------------------------------------- multi-core op
+def multicore_create_index(records: jax.Array, keys: jax.Array,
+                           mesh: Mesh, axis: str = "data",
+                           *, use_kernels: bool | None = None) -> jax.Array:
+    """records (Z*B, N, W) sharded over ``axis``; keys replicated.
+
+    Each device runs the full BIC pipeline on its local batches — the
+    paper's Fig. 4 dataflow (no cross-core communication during indexing;
+    results are resharded only on readout).  Returns (Z*B, M, ceil(N/32)).
+    """
+    zb, n, w = records.shape
+    m = keys.shape[0]
+    nw = math.ceil(n / 32)
+    if use_kernels is None:
+        use_kernels = jax.default_backend() == "tpu"
+
+    def per_core(rec_block, keys_rep):
+        def one(rec):
+            if use_kernels:
+                return ops.create_index(rec, keys_rep)
+            npad = -n % 32
+            mpad = -m % 32
+            rp = jnp.pad(rec.astype(jnp.int32), ((0, npad), (0, 0)),
+                         constant_values=-1)
+            kp = jnp.pad(keys_rep.astype(jnp.int32), (0, mpad),
+                         constant_values=-2)
+            return ref.create_index(rp, kp)[:m, :nw]
+        return jax.vmap(one)(rec_block)
+
+    fn = jax.shard_map(
+        per_core, mesh=mesh,
+        in_specs=(P(axis, None, None), P()),
+        out_specs=P(axis, None, None))
+    return fn(records, keys)
+
+
+# -------------------------------------------------------- elastic energy sim
+@dataclasses.dataclass(frozen=True)
+class PowerState:
+    """Operating point of one core."""
+    vdd_active: float = 1.2
+    vdd_standby: float = 0.4
+    vbb_standby: float = -2.0
+    use_rbb: bool = True
+
+
+@dataclasses.dataclass
+class EnergyReport:
+    active_joules: float = 0.0
+    standby_joules: float = 0.0
+    busy_core_seconds: float = 0.0
+    idle_core_seconds: float = 0.0
+    batches: int = 0
+
+    @property
+    def total_joules(self) -> float:
+        return self.active_joules + self.standby_joules
+
+
+def cycles_per_batch(cfg: BICConfig = PaperConfig) -> int:
+    """BIC core cycle count for one batch: N records x (load + M key probes)
+    + M transpose flush cycles (paper §III dataflow)."""
+    return cfg.num_records * (cfg.num_keys + 1) + cfg.num_keys
+
+
+class ElasticScheduler:
+    """Workload-aware core activation with energy accounting.
+
+    Each tick: ``workload`` batches arrive; the scheduler activates the
+    minimum number of cores that finishes within the tick, puts the rest in
+    standby (CG, optionally +RBB), and integrates energy with the calibrated
+    silicon model.
+    """
+
+    def __init__(self, num_cores: int, cfg: BICConfig = PaperConfig,
+                 state: PowerState = PowerState()):
+        self.num_cores = num_cores
+        self.cfg = cfg
+        self.state = state
+        self.freq = power.frequency(state.vdd_active)
+        self.batch_seconds = cycles_per_batch(cfg) / self.freq
+        self.p_active = power.active_power(state.vdd_active)
+        vbb = state.vbb_standby if state.use_rbb else 0.0
+        self.p_standby = power.standby_power(state.vdd_standby, vbb)
+
+    def cores_needed(self, workload: int, tick_seconds: float) -> int:
+        cap_per_core = max(1, int(tick_seconds / self.batch_seconds))
+        return min(self.num_cores, math.ceil(workload / cap_per_core))
+
+    def run(self, workloads: Sequence[int], tick_seconds: float) -> EnergyReport:
+        rep = EnergyReport()
+        for wl in workloads:
+            z = self.cores_needed(wl, tick_seconds) if wl else 0
+            busy = min(tick_seconds, (wl / max(z, 1)) * self.batch_seconds) if z else 0.0
+            rep.active_joules += z * self.p_active * busy
+            # active cores idle-standby for the remainder of the tick too
+            rep.standby_joules += (
+                z * self.p_standby * (tick_seconds - busy)
+                + (self.num_cores - z) * self.p_standby * tick_seconds)
+            rep.busy_core_seconds += z * busy
+            rep.idle_core_seconds += self.num_cores * tick_seconds - z * busy
+            rep.batches += wl
+        return rep
+
+
+# ------------------------------------------------------ straggler mitigation
+def lpt_schedule(batch_costs: Sequence[float], speeds: Sequence[float]
+                 ) -> tuple[float, list[int]]:
+    """Dynamic longest-processing-time assignment to heterogeneous cores.
+
+    Returns (makespan, assignment core-index per batch).  This is the
+    work-stealing policy the distributed runtime uses when a core (device
+    host) runs slow: batches go to the earliest-available core.
+    """
+    finish = [0.0] * len(speeds)
+    assignment = []
+    order = sorted(range(len(batch_costs)), key=lambda i: -batch_costs[i])
+    assign_of = [0] * len(batch_costs)
+    for i in order:
+        core = min(range(len(speeds)),
+                   key=lambda c: finish[c] + batch_costs[i] / speeds[c])
+        finish[core] += batch_costs[i] / speeds[core]
+        assign_of[i] = core
+    return max(finish) if finish else 0.0, assign_of
+
+
+def static_schedule(batch_costs: Sequence[float], speeds: Sequence[float]
+                    ) -> float:
+    """Baseline: round-robin striping (no straggler awareness)."""
+    finish = [0.0] * len(speeds)
+    for i, c in enumerate(batch_costs):
+        core = i % len(speeds)
+        finish[core] += c / speeds[core]
+    return max(finish) if finish else 0.0

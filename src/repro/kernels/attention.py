@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: fused flash-attention forward (the LM hot-spot).
+
+The pure-JAX chunked attention in models/flash.py is the portable path used
+by the dry-run; this kernel is the TPU runtime replacement for the forward
+pass: one (q-block × kv-block) tile per grid step, online-softmax state in
+VMEM scratch, output written on the last kv block.  The TPU grid iterates
+the trailing dimension sequentially, which is exactly the kv-streaming
+order flash attention wants; MXU-aligned block shapes (multiples of 128)
+are chosen by the ops.py wrapper.
+
+Validated in interpret mode against models/flash.py (see tests).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _flash_fwd_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, d_ref, *,
+                      causal: bool, scale: float, bq: int, bk: int,
+                      nk: int, seq_len: int):
+    i = pl.program_id(1)              # q block
+    j = pl.program_id(2)              # kv block (sequential, innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        d_ref[...] = jnp.zeros_like(d_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, hd)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, hd)
+    s = jnp.dot(q, k.T)                               # (bq, bk) on the MXU
+
+    q_pos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    k_pos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    ok = k_pos < seq_len
+    if causal:
+        ok &= k_pos <= q_pos
+    s = jnp.where(ok, s, NEG_INF)
+
+    m_prev = m_ref[...]                               # (bq, 1)
+    m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    d_ref[...] = d_ref[...] * corr + p.sum(axis=1, keepdims=True)
+    v = v_ref[0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + jnp.dot(p, v)
+    m_ref[...] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(d_ref[...], 1e-37)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "block_q", "block_k",
+                                    "interpret"))
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, block_q: int = 256,
+                        block_k: int = 256, interpret: bool = True
+                        ) -> jax.Array:
+    """q/k/v: (BH, S, hd) with kv heads pre-broadcast.  Returns (BH, S, hd).
+
+    S is padded to block multiples; hd should be a multiple of 128 on real
+    TPU (any size in interpret mode)."""
+    BH, S, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    nq, nk = -(-S // bq), -(-S // bk)
+    pad_q, pad_k = nq * bq - S, nk * bk - S
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+
+    out = pl.pallas_call(
+        functools.partial(_flash_fwd_kernel, causal=causal, scale=scale,
+                          bq=bq, bk=bk, nk=nk, seq_len=S),
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * bq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qp, kp, vp)
+    return out[:, :S]

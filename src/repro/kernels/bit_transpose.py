@@ -1,0 +1,81 @@
+"""Pallas TPU kernel: Transpose-Matrix (TM) stage of the BIC core.
+
+The ASIC's TM swaps buffer rows into BI columns with a wire permutation.
+With bits packed 32-per-uint32 (see cam_match.py) the TPU analogue is a
+*bit-block* transpose: every aligned 32x32 bit tile is transposed in-register
+with a 5-round butterfly (Hacker's Delight 7-7), then tiles are permuted.
+No unpack to bytes ever happens, so VMEM/HBM traffic stays at 1 bit/bit.
+
+The butterfly is vectorised across the lane axis: a (32, BC) uint32 block is
+BC independent 32x32 bit tiles, and each round combines a row with its
+partner row (index XOR j) via masked shifts.  Partner selection uses two
+jnp.rolls + a select instead of a sublane gather, which lowers to cheap
+sublane shifts on TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 32
+_U32 = jnp.uint32
+
+# Butterfly rounds (plain ints — jnp constants are built inside the trace,
+# Pallas rejects captured array consts): round j swaps the high-j bit-half of
+# each "up" row (index bit j clear) with the low-j half of its partner.
+_ROUNDS = (
+    (16, 0x0000FFFF),
+    (8, 0x00FF00FF),
+    (4, 0x0F0F0F0F),
+    (2, 0x33333333),
+    (1, 0x55555555),
+)
+
+
+def _transpose32(x: jax.Array) -> jax.Array:
+    """Transpose each 32x32 bit tile in a (32, BC) uint32 block (in-bit).
+
+    LSB-first convention: output word b bit r == input word r bit b.
+    """
+    rows = jax.lax.broadcasted_iota(jnp.int32, x.shape, 0)
+    for j, mi in _ROUNDS:
+        m = jnp.uint32(mi)
+        ju = jnp.uint32(j)
+        is_up = (rows & j) == 0                       # row with index-bit j clear
+        partner = jnp.where(is_up, jnp.roll(x, -j, axis=0), jnp.roll(x, j, axis=0))
+        # up row k   : swap high(x[k]) with low(x[k+j]):  t=((x>>j)^p)&m ; x^=t<<j
+        # down row k+j:                                   t=((p>>j)^x)&m ; x^=t
+        t_up = ((x >> ju) ^ partner) & m
+        t_dn = ((partner >> ju) ^ x) & m
+        x = jnp.where(is_up, x ^ (t_up << ju), x ^ t_dn)
+    return x
+
+
+def _bit_transpose_kernel(in_ref, out_ref, *, block_c: int):
+    x = in_ref[...]                                   # (32, BC) uint32
+    y = _transpose32(x)                               # y[b, c] = out word for column c, bit b
+    # Output row within the block is c*32 + b  ->  (BC, 32) -> (BC*32, 1).
+    out_ref[...] = y.T.reshape(block_c * PACK, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def bit_transpose(packed: jax.Array, *, block_c: int = 64,
+                  interpret: bool = True) -> jax.Array:
+    """Packed (R, C/32) uint32 -> packed (C, R/32) uint32.
+
+    R % 32 == 0 and (C/32) % block_c == 0 (ops.py pads arbitrary shapes).
+    """
+    R, Cw = packed.shape
+    assert R % PACK == 0 and Cw % block_c == 0
+    grid = (R // PACK, Cw // block_c)
+    return pl.pallas_call(
+        functools.partial(_bit_transpose_kernel, block_c=block_c),
+        grid=grid,
+        in_specs=[pl.BlockSpec((PACK, block_c), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((block_c * PACK, 1), lambda i, j: (j, i)),
+        out_shape=jax.ShapeDtypeStruct((Cw * PACK, R // PACK), _U32),
+        interpret=interpret,
+    )(packed.astype(_U32))

@@ -1,0 +1,73 @@
+"""Pallas TPU kernel: CAM match stage of the BIC core.
+
+The ASIC's CAM compares one key per cycle against a 32-word record held in
+match-line registers.  On TPU the analogue of the parallel match lines is the
+VPU lane grid: we tile BN records x BM keys into VMEM, broadcast each key
+across lanes and OR-reduce the per-word equality over the record-word axis.
+Match bits never leave VMEM unpacked — they are packed 32-per-uint32 before
+the store, which is the TPU analogue of the paper's register-file buffer
+(and cuts HBM write traffic by 32x).
+
+Block shapes: records (BN, W) int32, keys (BM,) int32 -> out (BN, BM/32) u32.
+BM is a multiple of 32; the lane dim of the output block is BM/32 so BM=4096
+gives a 128-lane-aligned store.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PACK = 32
+_U32 = jnp.uint32
+
+
+def _cam_match_kernel(records_ref, keys_ref, out_ref, *, block_m: int):
+    """One (BN records) x (BM keys) tile."""
+    records = records_ref[...]                       # (BN, W) int32
+    keys = keys_ref[...]                             # (BM,)  int32
+    bn, w = records.shape
+
+    # (BN, BM) match matrix: OR over the record-word axis of per-word equality.
+    # Loop over W (small: 32 in the paper) to keep the VMEM working set at
+    # BN x BM bits rather than BN x BM x W.
+    def body(i, acc):
+        word = jax.lax.dynamic_slice_in_dim(records, i, 1, axis=1)  # (BN, 1)
+        return acc | (word == keys[None, :])
+
+    match = jax.lax.fori_loop(
+        0, w, body, jnp.zeros((bn, block_m), dtype=jnp.bool_))
+
+    # Pack along the key axis, LSB-first: (BN, BM/32) uint32.
+    m = match.astype(_U32).reshape(bn, block_m // PACK, PACK)
+    weights = (_U32(1) << jnp.arange(PACK, dtype=_U32))
+    out_ref[...] = (m * weights[None, None, :]).sum(axis=-1).astype(_U32)
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "block_m", "interpret"))
+def cam_match(records: jax.Array, keys: jax.Array, *,
+              block_n: int = 256, block_m: int = 1024,
+              interpret: bool = True) -> jax.Array:
+    """records (N, W) int32, keys (M,) int32 -> packed (N, M/32) uint32.
+
+    N % block_n == 0, M % block_m == 0, block_m % 32 == 0 (wrappers in
+    ops.py pad arbitrary shapes).
+    """
+    N, W = records.shape
+    (M,) = keys.shape
+    assert M % block_m == 0 and N % block_n == 0 and block_m % PACK == 0
+
+    grid = (N // block_n, M // block_m)
+    return pl.pallas_call(
+        functools.partial(_cam_match_kernel, block_m=block_m),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_n, W), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_m,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((block_n, block_m // PACK), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((N, M // PACK), _U32),
+        interpret=interpret,
+    )(records.astype(jnp.int32), keys.astype(jnp.int32))

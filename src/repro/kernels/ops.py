@@ -1,0 +1,120 @@
+"""Public entry points for the BIC Pallas kernels.
+
+These wrappers accept arbitrary shapes (padding to kernel tile multiples),
+pick sane block sizes, and auto-select interpret mode: on CPU the kernels
+run through the Pallas interpreter (bit-exact, used by the test suite); on
+TPU they compile to Mosaic.  ``ref.py`` holds the pure-jnp oracles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bit_transpose as _bt
+from repro.kernels import bitmap_ops as _bq
+from repro.kernels import cam_match as _cm
+from repro.kernels import ref
+
+PACK = 32
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _pick_block(total: int, preferred: int, multiple: int) -> int:
+    """Largest divisor-friendly block: min(preferred, total), multiple-aligned."""
+    b = min(preferred, total)
+    b = max(multiple, b - (b % multiple))
+    while total % b:
+        b -= multiple
+    return b
+
+
+def cam_match(records: jax.Array, keys: jax.Array, *,
+              interpret: bool | None = None) -> jax.Array:
+    """records (N, W) int, keys (M,) int -> packed (N, ceil(M/32)) uint32.
+
+    Pads N to a block multiple and M to 32; padded records use a sentinel
+    value no real key can match, padded keys match nothing by construction
+    (sentinel differs from the record pad sentinel).
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    N, W = records.shape
+    (M,) = keys.shape
+    Mp = _round_up(M, PACK)
+    block_m = _pick_block(Mp, 1024, PACK)
+    block_n = _pick_block(_round_up(N, 8), 256, 8)
+    Np = _round_up(N, block_n)
+    rec = jnp.pad(records.astype(jnp.int32), ((0, Np - N), (0, 0)),
+                  constant_values=-1)
+    ks = jnp.pad(keys.astype(jnp.int32), (0, Mp - M), constant_values=-2)
+    out = _cm.cam_match(rec, ks, block_n=block_n, block_m=block_m,
+                        interpret=interpret)
+    return out[:N]
+
+
+def transpose(packed: jax.Array, *, interpret: bool | None = None) -> jax.Array:
+    """Packed (R, Cw) uint32 -> (Cw*32, ceil(R/32)) uint32 (zero-padded R)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    R, Cw = packed.shape
+    Rp = _round_up(R, PACK)
+    block_c = _pick_block(Cw, 64, 1)
+    x = jnp.pad(packed.astype(jnp.uint32), ((0, Rp - R), (0, 0)))
+    return _bt.bit_transpose(x, block_c=block_c, interpret=interpret)
+
+
+def query(rows: jax.Array, invert: jax.Array, *,
+          interpret: bool | None = None) -> tuple[jax.Array, jax.Array]:
+    """Fused AND_k (invert_k ? ~row_k : row_k) + popcount over packed rows.
+
+    rows (K, Nw) uint32.  NOTE: inverted rows make the *padding* words all-1s;
+    we therefore mask padded words back to zero before the popcount by
+    padding every row with 0 and additionally ANDing an all-ones literal row
+    is unnecessary — instead we pad with a non-inverted all-zero row, which
+    forces padded result words to 0 regardless of inversions.
+    """
+    if interpret is None:
+        interpret = not _on_tpu()
+    K, Nw = rows.shape
+    block_n = _pick_block(_round_up(Nw, 8), 2048, 8)
+    Nwp = _round_up(Nw, block_n)
+    pad_cols = Nwp - Nw
+    r = jnp.pad(rows.astype(jnp.uint32), ((0, 0), (0, pad_cols)))
+    inv = invert.astype(jnp.int32)
+    if pad_cols and bool(K):
+        # Guard: if every operand is inverted, padded words become all-ones.
+        # Append one non-inverted row that is all-ones in the real region and
+        # zero in the pad, restoring correctness without branching.
+        guard = jnp.concatenate([
+            jnp.full((1, Nw), 0xFFFFFFFF, dtype=jnp.uint32),
+            jnp.zeros((1, pad_cols), dtype=jnp.uint32)], axis=1)
+        r = jnp.concatenate([r, guard], axis=0)
+        inv = jnp.concatenate([inv, jnp.zeros((1,), jnp.int32)])
+    result, count = _bq.bitmap_query(r, inv, block_n=block_n,
+                                     interpret=interpret)
+    return result[:Nw], count
+
+
+def create_index(records: jax.Array, keys: jax.Array, *,
+                 interpret: bool | None = None) -> jax.Array:
+    """Full BIC pipeline (CAM match -> buffer -> TM transpose).
+
+    records (N, W), keys (M,) -> key-major packed bitmap (M, ceil(N/32)).
+    Matches ``ref.create_index`` for 32-aligned shapes and is the kernel
+    realization of Fig. 3 of the paper.
+    """
+    record_major = cam_match(records, keys, interpret=interpret)  # (N, Mw)
+    key_major = transpose(record_major, interpret=interpret)      # (Mw*32, ceil(N/32))
+    return key_major[: keys.shape[0]]
+
+
+__all__ = ["cam_match", "transpose", "query", "create_index", "ref"]

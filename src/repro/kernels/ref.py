@@ -1,0 +1,88 @@
+"""Pure-jnp reference oracles for the BIC kernels.
+
+Conventions (shared by kernels, oracles and tests):
+  * A *record* is a row of W integer words (the paper uses 32 x 8-bit words).
+  * ``cam_match``  : records (N, W) x keys (M,) -> record-major match bits,
+                     packed along the key axis  -> (N, M/32) uint32.
+  * ``bit_transpose``: packed (R, C/32) uint32 -> packed (C, R/32) uint32,
+                     i.e. bit (r, c) of the logical R x C bit-matrix moves
+                     to bit (c, r).
+  * Packing is LSB-first: bit j of word w covers logical column w*32 + j.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+PACK = 32
+_U32 = jnp.uint32
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack a (..., L) bool/int array into (..., L/32) uint32, LSB-first.
+
+    L must be a multiple of 32 (callers pad).
+    """
+    *lead, L = bits.shape
+    assert L % PACK == 0, f"pack_bits: L={L} not a multiple of {PACK}"
+    b = bits.astype(_U32).reshape(*lead, L // PACK, PACK)
+    weights = (_U32(1) << jnp.arange(PACK, dtype=_U32))
+    return (b * weights).sum(axis=-1).astype(_U32)
+
+
+def unpack_bits(packed: jax.Array, length: int | None = None) -> jax.Array:
+    """Inverse of :func:`pack_bits` -> (..., L) uint32 of {0, 1}."""
+    *lead, Lw = packed.shape
+    shifts = jnp.arange(PACK, dtype=_U32)
+    bits = (packed[..., None] >> shifts) & _U32(1)
+    bits = bits.reshape(*lead, Lw * PACK)
+    if length is not None:
+        bits = bits[..., :length]
+    return bits
+
+
+def cam_match_unpacked(records: jax.Array, keys: jax.Array) -> jax.Array:
+    """(N, W) records x (M,) keys -> (N, M) {0,1}: record n contains key m."""
+    eq = records[:, None, :] == keys[None, :, None]          # (N, M, W)
+    return jnp.any(eq, axis=-1).astype(_U32)
+
+
+def cam_match(records: jax.Array, keys: jax.Array) -> jax.Array:
+    """Reference for the cam_match kernel: packed (N, M/32) uint32."""
+    return pack_bits(cam_match_unpacked(records, keys))
+
+
+def bit_transpose(packed: jax.Array, nrows: int | None = None) -> jax.Array:
+    """Reference packed bit-matrix transpose.
+
+    packed: (R, C/32) uint32 for a logical R x C bit matrix, R % 32 == 0.
+    Returns (C, R/32) uint32.
+    """
+    R, Cw = packed.shape
+    assert R % PACK == 0
+    bits = unpack_bits(packed)            # (R, C)
+    return pack_bits(bits.T)              # (C, R/32)
+
+
+def bitmap_query(rows: jax.Array, invert: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Reference fused bitmap query.
+
+    rows   : (K, Nw) packed uint32 — the K operand index rows.
+    invert : (K,) {0,1} — 1 means the row enters the AND negated.
+    Returns (result_row (Nw,) uint32, popcount () int32) for
+    AND_k (invert_k ? ~rows_k : rows_k).
+    """
+    inv = invert.astype(_U32)[:, None]
+    terms = rows ^ (inv * _U32(0xFFFFFFFF))
+    result = terms[0]
+    for k in range(1, rows.shape[0]):
+        result = result & terms[k]
+    count = jax.lax.population_count(result).astype(jnp.int32).sum()
+    return result, count
+
+
+def create_index(records: jax.Array, keys: jax.Array) -> jax.Array:
+    """Full reference BIC pipeline: records (N, W), keys (M,) ->
+    key-major bitmap index, packed (M, N/32) uint32.  N, M % 32 == 0."""
+    record_major = cam_match(records, keys)       # (N, M/32)
+    return bit_transpose(record_major)            # (M, N/32)

@@ -1,0 +1,315 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+cell against the production meshes (16x16 single-pod, 2x16x16 multi-pod)
+and record memory/cost/collective analysis for the roofline report.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-7b --shape train_4k
+  python -m repro.launch.dryrun --arch all [--multi-pod] [--out results/]
+"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# ^ MUST precede any other import: jax locks the device count on first init.
+
+import argparse
+import json
+import re
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCHS, canonical, get_config
+from repro.launch.mesh import make_production_mesh
+from repro.launch.shapes import SHAPES, batch_specs, skip_reason
+from repro.models.model import (abstract_params, cache_logical,
+                                param_logical)
+from repro.optim.adamw import OptimConfig, abstract_opt_state
+from repro.parallel.sharding import logical_spec
+from repro.serve.step import make_decode_step, make_prefill_step
+from repro.train.step import TrainConfig, make_train_step
+
+ACCUM_STEPS = int(os.environ.get("DRYRUN_ACCUM", "4"))
+# Wider models need more microbatching to keep the per-device activation
+# working set inside 16 GB HBM; capped so the per-device microbatch stays >= 1.
+ACCUM_BY_ARCH = {"command_r_plus_104b": 16, "granite_20b": 8}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0
+    dt, dims = m.groups()
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> dict[str, float]:
+    """Per-collective traffic estimate from the compiled HLO: result-shape
+    bytes (x2 for all-reduce: ring reduce+broadcast), operand bytes for
+    reduce-scatter."""
+    out = {c: 0.0 for c in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s*=?\s*(all-gather|all-reduce|"
+                     r"reduce-scatter|all-to-all|collective-permute)", s)
+        if not m:
+            continue
+        result_part, op = m.groups()
+        if op == "reduce-scatter":
+            args = s.split(op, 1)[1]
+            b = _shape_bytes(args)
+        else:
+            b = _shape_bytes(result_part)
+        if op == "all-reduce":
+            b *= 2
+        out[op] += b
+    out["total"] = sum(out.values())
+    return out
+
+
+def build_step_and_specs(cfg, shape, mesh, variant: str = ""):
+    """Returns (step_fn, args (abstract), in_shardings, out_shardings)."""
+    import re as _re
+    from repro.parallel import sharding as _sh
+    if "serve_tp" in variant and shape.kind != "train":
+        # serving: weights TP-only in bf16 (no FSDP gathers over 'data')
+        rules = dict(_sh.DEFAULT_RULES)
+        rules["fsdp"] = None
+        _sh.set_rules(rules)
+        params = {k: jax.ShapeDtypeStruct(v.shape, jnp.bfloat16)
+                  for k, v in abstract_params(cfg).items()}
+    elif "no_fsdp" in variant:
+        # train with TP-only weights (DP-replicated): kills the per-micro
+        # weight all-gathers; only viable when params fit TP-sharded.
+        rules = dict(_sh.DEFAULT_RULES)
+        rules["fsdp"] = None
+        _sh.set_rules(rules)
+        params = abstract_params(cfg)
+    else:
+        _sh.set_rules(dict(_sh.DEFAULT_RULES))
+        params = abstract_params(cfg)
+    p_logical = param_logical(cfg)
+    p_spec = {k: logical_spec(params[k].shape, p_logical[k]) for k in params}
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), p_spec)
+    batch = batch_specs(cfg, shape)
+
+    def batch_spec(name, x):
+        if name == "mrope_positions":
+            return logical_spec(x.shape, (None, "batch", None))
+        if name == "pos" or not x.ndim:
+            return P()
+        return logical_spec(x.shape, ("batch",) + (None,) * (x.ndim - 1))
+
+    if shape.kind == "train":
+        # Microbatching keeps per-device activations inside 16 GB HBM; the
+        # cap ensures the per-device microbatch stays an integer >= 1.
+        dp_size = 1
+        for ax in ("pod", "data"):
+            dp_size *= dict(mesh.shape).get(ax, 1)
+        accum = ACCUM_BY_ARCH.get(cfg.name.replace("-", "_").replace(".", "_"),
+                                  ACCUM_STEPS)
+        m = _re.search(r"accum(\d+)", variant)
+        if m:
+            accum = int(m.group(1))
+        accum = max(1, min(accum, shape.global_batch // dp_size))
+        step = make_train_step(
+            cfg, TrainConfig(OptimConfig(), accum_steps=accum))
+        opt = abstract_opt_state(params, OptimConfig())
+        o_spec = {"m": p_spec, "v": p_spec, "step": P()}
+        o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s), o_spec)
+        b_shard = {k: NamedSharding(mesh, batch_spec(k, v))
+                   for k, v in batch.items()}
+        args = (params, opt, batch)
+        in_sh = (p_shard, o_shard, b_shard)
+        out_sh = (p_shard, o_shard, None)
+        return step, args, in_sh, out_sh, (0, 1)
+
+    c_logical = cache_logical(cfg)
+
+    def cache_spec_of(name, x):
+        return logical_spec(x.shape, c_logical[name]) if name != "pos" else P()
+
+    if shape.kind == "prefill":
+        step = make_prefill_step(cfg, max_len=shape.seq_len)
+        b_shard = {k: NamedSharding(mesh, batch_spec(k, v))
+                   for k, v in batch.items()}
+        args = (params, batch)
+        in_sh = (p_shard, b_shard)
+        return step, args, in_sh, None, ()
+
+    # decode: donate the cache (aliased in -> out, halves live memory)
+    step = make_decode_step(cfg)
+    cache = batch["cache"]
+    c_shard = {k: NamedSharding(mesh, cache_spec_of(k, v))
+               for k, v in cache.items()}
+    b_shard = {"tokens": NamedSharding(mesh, batch_spec("tokens",
+                                                        batch["tokens"])),
+               "cache": c_shard}
+    args = (params, batch)
+    in_sh = (p_shard, b_shard)
+    out_sh = (None, c_shard)
+    return step, args, in_sh, out_sh, (1,)
+
+
+def _compile_and_analyze(cfg, shape, mesh, variant: str = "") -> dict:
+    t0 = time.time()
+    fn, args, in_sh, out_sh, donate = build_step_and_specs(
+        cfg, shape, mesh, variant)
+    kw = {"in_shardings": in_sh, "donate_argnums": donate}
+    if out_sh is not None:
+        kw["out_shardings"] = out_sh
+    jitted = jax.jit(fn, **kw)
+    lowered = jitted.lower(*args)
+    t_lower = time.time() - t0
+    compiled = lowered.compile()
+    t_compile = time.time() - t0 - t_lower
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "flops": cost.get("flops", 0.0) if cost else None,
+        "bytes_accessed": cost.get("bytes accessed", 0.0) if cost else None,
+        "collective_bytes": coll,
+        "memory": {
+            k: getattr(mem, k, None) for k in
+            ("temp_size_in_bytes", "argument_size_in_bytes",
+             "output_size_in_bytes", "alias_size_in_bytes",
+             "generated_code_size_in_bytes")} if mem else None,
+    }
+
+
+# Hillclimb variants (§Perf): applied as config overrides on top of the arch.
+def _moe_ep(cfg):
+    import dataclasses as _dc
+    return _dc.replace(cfg, moe=_dc.replace(cfg.moe, ep_pad=True))
+
+
+VARIANTS = {
+    "block_skip": lambda cfg: _replace(cfg, flash_block_skip=True),
+    "remat_dots": lambda cfg: _replace(cfg, remat="dots"),
+    "no_remat": lambda cfg: _replace(cfg, remat="none"),
+    "seq_sp": lambda cfg: _replace(cfg, seq_sharded=True),
+    "ulysses": lambda cfg: _replace(cfg, ulysses_attn=True),
+    "moe_ep": _moe_ep,
+    # accumN: accumulation-step override, handled in build_step_and_specs
+    "accum1": lambda cfg: cfg,
+    "accum2": lambda cfg: cfg,
+    "accum4": lambda cfg: cfg,
+    "accum8": lambda cfg: cfg,
+    # serve_tp: serving cells drop FSDP (weights TP-only, bf16) — no
+    # per-layer weight gathers over 'data'; handled in build/run.
+    "serve_tp": lambda cfg: cfg,
+    "no_fsdp": lambda cfg: cfg,
+}
+
+
+def _replace(cfg, **kw):
+    import dataclasses as _dc
+    return _dc.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             with_l0: bool = True, variant: str = "") -> dict:
+    """Compile one (arch, shape, mesh) cell.
+
+    XLA's cost_analysis counts a while-loop body ONCE (trip counts are not
+    applied), so a scanned layer stack under-reports flops/bytes by ~L.  We
+    therefore also compile a num_layers=0 variant: the roofline report uses
+    corrected = L0 + L * (full - L0), plus an analytic term for the
+    attention chunk loops (see benchmarks/roofline.py).
+    """
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    for v in filter(None, variant.split(",")):
+        cfg = VARIANTS[v](cfg)
+    shape = SHAPES[shape_name]
+    cell = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "variant": variant}
+    reason = skip_reason(cfg, shape)
+    if reason:
+        cell["status"] = "skipped"
+        cell["reason"] = reason
+        return cell
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with jax.set_mesh(mesh):
+        full = _compile_and_analyze(cfg, shape, mesh, variant)
+        cell.update(full)
+        if with_l0:
+            cfg0 = _dc.replace(cfg, num_layers=0,
+                               enc_layers=0 if cfg.enc_dec else cfg.enc_layers)
+            try:
+                cell["l0"] = _compile_and_analyze(cfg0, shape, mesh, variant)
+            except Exception as e:  # noqa: BLE001
+                cell["l0"] = {"error": f"{type(e).__name__}: {e}"}
+    cell["status"] = "ok"
+    cell["num_devices"] = int(mesh.devices.size)
+    return cell
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--variant", default="",
+                    help="comma-separated config overrides (see VARIANTS)")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCHS if args.arch == "all" else [canonical(args.arch)]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    os.makedirs(args.out, exist_ok=True)
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                tag = f"{arch}-{shape_name}-{'mp' if mp else 'sp'}"
+                if args.variant:
+                    tag += "-" + args.variant.replace(",", "+")
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[dryrun] {tag}: cached", flush=True)
+                    continue
+                print(f"[dryrun] {tag} ...", flush=True)
+                try:
+                    cell = run_cell(arch, shape_name, mp,
+                                    variant=args.variant)
+                except Exception as e:  # noqa: BLE001
+                    cell = {"arch": arch, "shape": shape_name,
+                            "mesh": "2x16x16" if mp else "16x16",
+                            "variant": args.variant,
+                            "status": "error", "error": f"{type(e).__name__}: {e}",
+                            "traceback": traceback.format_exc()[-2000:]}
+                    failures += 1
+                with open(path, "w") as f:
+                    json.dump(cell, f, indent=2)
+                print(f"[dryrun] {tag}: {cell['status']} "
+                      f"(compile={cell.get('compile_s', '-')}s)", flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.  A function (not a module constant) so
+importing never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import AxisType
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 16x16 = 256 chips (data, model).
+    Multi-pod: 2x16x16 = 512 chips (pod, data, model); the pod axis is an
+    outer data-parallel axis (DCN-linked) — see parallel/sharding.py."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(AxisType.Auto,) * len(axes))
+
+
+def make_smoke_mesh():
+    """Whatever devices exist (CPU tests: 1 device) on a (data,) mesh."""
+    n = len(jax.devices())
+    return jax.make_mesh((n,), ("data",), axis_types=(AxisType.Auto,))

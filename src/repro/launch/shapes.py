@@ -1,0 +1,105 @@
+"""Assigned input shapes and abstract input specs for every architecture.
+
+Four shapes per LM arch (40 cells total):
+  train_4k    : train_step,  seq 4096,  global_batch 256
+  prefill_32k : prefill_step, seq 32768, global_batch 32
+  decode_32k  : decode_step, KV cache 32768, global_batch 128
+  long_500k   : decode_step, cache 524288, global_batch 1 — sub-quadratic
+                archs only (SSM / hybrid); skipped for pure full-attention
+                archs per the assignment (see DESIGN.md §4).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_cache
+
+I32 = jnp.int32
+F32 = jnp.float32
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeSpec) -> str | None:
+    """None if the (arch, shape) cell runs; else why it is skipped."""
+    if shape.name == "long_500k":
+        if cfg.block == "attn" and (cfg.sliding_window is None
+                                    or cfg.global_every is not None):
+            return ("pure full-attention arch: 500k decode requires "
+                    "sub-quadratic attention (assignment rule)")
+        if cfg.enc_dec:
+            return "enc-dec full attention: 500k decode out of scope"
+    return None
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict:
+    """Abstract (ShapeDtypeStruct) model inputs for one cell — weak-type
+    correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        specs = {"tokens": _sds((B, S), I32), "labels": _sds((B, S), I32)}
+        if cfg.vlm:
+            specs["visual"] = _sds((B, cfg.visual_prefix, cfg.d_model), F32)
+            specs["mrope_positions"] = _sds((3, B, S), I32)
+        if cfg.enc_dec:
+            specs["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), F32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": _sds((B, S), I32)}
+        if cfg.vlm:
+            specs["visual"] = _sds((B, cfg.visual_prefix, cfg.d_model), F32)
+            specs["mrope_positions"] = _sds((3, B, S), I32)
+        if cfg.enc_dec:
+            specs["frames"] = _sds((B, cfg.enc_frames, cfg.d_model), F32)
+        return specs
+    # decode: one new token against a seq_len cache
+    specs = {"tokens": _sds((B, 1), I32),
+             "cache": init_cache(cfg, B, S, abstract=True)}
+    return specs
+
+
+def demo_batch(cfg: ModelConfig, kind: str, batch: int, seq: int,
+               key: jax.Array) -> dict:
+    """Concrete small inputs for CPU smoke tests."""
+    ks = jax.random.split(key, 4)
+    toks = jax.random.randint(ks[0], (batch, seq), 0, cfg.vocab_size, I32)
+    out: dict = {}
+    if kind == "train":
+        out["tokens"] = toks
+        out["labels"] = jnp.roll(toks, -1, axis=1)
+    elif kind == "prefill":
+        out["tokens"] = toks
+    else:
+        out["tokens"] = toks[:, :1]
+        out["cache"] = init_cache(cfg, batch, seq)
+    if cfg.vlm and kind != "decode":
+        out["visual"] = jax.random.normal(
+            ks[1], (batch, cfg.visual_prefix, cfg.d_model), F32) * 0.02
+        out["mrope_positions"] = jnp.broadcast_to(
+            jnp.arange(seq, dtype=I32)[None, None], (3, batch, seq))
+    if cfg.enc_dec and kind != "decode":
+        out["frames"] = jax.random.normal(
+            ks[2], (batch, cfg.enc_frames, cfg.d_model), F32) * 0.02
+    return out

@@ -1,0 +1,183 @@
+"""Transformer building blocks: norms, rotary embeddings (RoPE / M-RoPE),
+gated MLPs, and a chunked flash-style attention that is memory-bounded at
+any sequence length (pure JAX — compiles on CPU for the dry-run and on TPU;
+a Pallas flash kernel in kernels/attention.py can replace it at runtime).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+# ------------------------------------------------------------------- norms
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))
+            ).astype(dt)
+
+
+# -------------------------------------------------------------------- rope
+def rope_angles(positions: Array, head_dim: int, theta: float,
+                mrope_sections: tuple[int, ...] | None = None) -> Array:
+    """positions: (B, S) for RoPE or (3, B, S) for M-RoPE -> (B, S, hd/2).
+
+    M-RoPE (Qwen2-VL): the hd/2 frequency slots are split into sections
+    (temporal, height, width); slot i takes its position from the stream its
+    section belongs to.  Text tokens carry identical streams, so M-RoPE
+    degenerates to RoPE for them.
+    """
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if positions.ndim == 2:                       # plain RoPE
+        return positions[..., None].astype(jnp.float32) * inv_freq
+    assert mrope_sections is not None and sum(mrope_sections) == half
+    stream_of_slot = jnp.repeat(
+        jnp.arange(len(mrope_sections)),
+        jnp.asarray(mrope_sections),
+        total_repeat_length=half)                 # (half,)
+    pos = jnp.take(positions, stream_of_slot, axis=0)      # (half, B, S)
+    return jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * inv_freq
+
+
+def apply_rope(x: Array, angles: Array) -> Array:
+    """x: (B, S, H, hd), angles: (B, S, hd/2) — rotate-half convention."""
+    dt = x.dtype
+    half = x.shape[-1] // 2
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half].astype(jnp.float32), x[..., half:].astype(jnp.float32)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# --------------------------------------------------------------------- mlp
+def mlp(x: Array, p: dict, act: str) -> Array:
+    """Gated (silu/geglu) or plain (gelu) MLP.  Weights: w_in/w_gate (d, f),
+    w_out (f, d)."""
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(x.dtype))
+    if act in ("silu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(x.dtype))
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+        h = g * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, ("batch", None, "mlp"))
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(x.dtype))
+
+
+# --------------------------------------------------------------- attention
+class AttnMask(NamedTuple):
+    """Static attention-mask description, applied blockwise inside flash."""
+    causal: bool
+    window: int | None          # sliding window size (None = unbounded)
+    q_offset: int | Array       # absolute position of q[0] (decode: pos)
+    kv_len: int | Array | None  # valid kv length (decode: pos + 1)
+
+
+def _block_mask(q_pos: Array, k_pos: Array, m: AttnMask) -> Array:
+    """(Sq, Sk) bool — True where attention is allowed."""
+    q_abs = q_pos + m.q_offset
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), dtype=bool)
+    if m.causal:
+        ok &= k_pos[None, :] <= q_abs[:, None]
+    if m.window is not None:
+        ok &= k_pos[None, :] > (q_abs[:, None] - m.window)
+    if m.kv_len is not None:
+        ok &= k_pos[None, :] < m.kv_len
+    return ok
+
+
+def flash_attention(q: Array, k: Array, v: Array, mask: AttnMask,
+                    *, q_chunk: int = 512, kv_chunk: int = 1024) -> Array:
+    """Chunked online-softmax attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KV, hd) with H % KV == 0.
+    Memory is O(Sq * kv_chunk) per head instead of O(Sq * Skv).
+    """
+    B, Sq, H, hd = q.shape
+    _, Skv, KV, _ = k.shape
+    groups = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    q = q.astype(jnp.float32) * scale
+    qc = min(q_chunk, Sq)
+    kc = min(kv_chunk, Skv)
+    nq, nk = -(-Sq // qc), -(-Skv // kc)
+    # pad to chunk multiples
+    qp = jnp.pad(q, ((0, 0), (0, nq * qc - Sq), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, nk * kc - Skv), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, nk * kc - Skv), (0, 0), (0, 0)))
+    # (B, nq, qc, KV, g, hd) view of q
+    qv = qp.reshape(B, nq, qc, KV, groups, hd)
+    kv_ = kp.reshape(B, nk, kc, KV, hd)
+    vv = vp.reshape(B, nk, kc, KV, hd)
+
+    def q_block(i, q_i):
+        # q_i: (B, qc, KV, g, hd)
+        q_pos = i * qc + jnp.arange(qc)
+
+        def kv_step(carry, j):
+            acc, m_run, d_run = carry
+            k_j = kv_[:, j].astype(jnp.float32)          # (B, kc, KV, hd)
+            v_j = vv[:, j].astype(jnp.float32)
+            s = jnp.einsum("bqkgh,bckh->bkgqc", q_i, k_j)  # (B,KV,g,qc,kc)
+            k_pos = j * kc + jnp.arange(kc)
+            ok = _block_mask(q_pos, k_pos, mask)           # (qc, kc)
+            ok &= (k_pos < Skv)[None, :]
+            s = jnp.where(ok[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            d_new = d_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqc,bckh->bkgqh", p, v_j)
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, d_new), None
+
+        acc0 = jnp.zeros((B, KV, groups, qc, hd), jnp.float32)
+        m0 = jnp.full((B, KV, groups, qc), NEG_INF, jnp.float32)
+        d0 = jnp.zeros((B, KV, groups, qc), jnp.float32)
+        (acc, m_run, d_run), _ = jax.lax.scan(
+            kv_step, (acc0, m0, d0), jnp.arange(nk))
+        out = acc / jnp.maximum(d_run[..., None], 1e-37)
+        return out                                        # (B, KV, g, qc, hd)
+
+    if nq == 1:
+        out = q_block(0, qv[:, 0])[:, :, :, None]         # add nq axis
+        out = jnp.moveaxis(out, 3, 1)
+    else:
+        outs = jax.lax.map(lambda args: q_block(*args),
+                           (jnp.arange(nq), jnp.moveaxis(qv, 1, 0)))
+        out = jnp.moveaxis(outs, 0, 3)                    # (B,KV,g,nq,qc,hd)
+    # (B, KV, g, nq, qc, hd) -> (B, Sq, H, hd)
+    out = out.reshape(B, KV, groups, nq * qc, hd)
+    out = jnp.moveaxis(out, 3, 1).reshape(B, nq * qc, H, hd)
+    return out[:, :Sq].astype(k.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     mask: AttnMask) -> Array:
+    """Single-position attention against a (possibly padded) KV cache.
+
+    q: (B, 1, H, hd); caches: (B, Smax, KV, hd)."""
+    B, _, H, hd = q.shape
+    _, Smax, KV, _ = k_cache.shape
+    groups = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    qv = (q.astype(jnp.float32) * scale).reshape(B, KV, groups, hd)
+    s = jnp.einsum("bkgh,bckh->bkgc", qv, k_cache.astype(jnp.float32))
+    k_pos = jnp.arange(Smax)
+    ok = _block_mask(jnp.zeros((1,), jnp.int32), k_pos, mask)[0]   # (Smax,)
+    s = jnp.where(ok[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgc,bckh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(B, 1, H, hd).astype(k_cache.dtype)

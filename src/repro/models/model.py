@@ -1,0 +1,544 @@
+"""Unified model: schema-driven params, scan-over-layers forward with
+train / prefill / decode modes, covering every assigned architecture family.
+
+Param layout: every per-layer tensor is stacked on a leading L axis so the
+layer stack is a single ``lax.scan`` — compile time is depth-independent
+(essential for the 64-layer 104B dry-run) and FSDP all-gathers exactly one
+layer's weights at a time inside the loop.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models.config import ModelConfig
+from repro.models.flash import flash_attention_vjp
+from repro.models.layers import (AttnMask, apply_rope, decode_attention,
+                                 flash_attention, mlp, rms_norm, rope_angles)
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ----------------------------------------------------------------- schema
+def _schema(cfg: ModelConfig) -> dict[str, tuple[tuple[int, ...], tuple, float]]:
+    """name -> (shape, logical axis names, init scale).  Per-layer tensors
+    are stacked on a leading L axis (logical name None: replicated)."""
+    d, L = cfg.d_model, cfg.num_layers
+    H, KV, hd, f = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim, cfg.d_ff
+    s: dict[str, tuple[tuple[int, ...], tuple, float]] = {}
+    emb_scale = 0.02
+    w_scale = 0.02
+    o_scale = 0.02 / math.sqrt(2 * max(L, 1))
+
+    s["embed"] = ((cfg.vocab_padded, d), ("vocab", "fsdp"), emb_scale)
+    s["final_norm"] = ((d,), (None,), 0.0)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ((d, cfg.vocab_padded), ("fsdp", "vocab"), emb_scale)
+
+    def attn(prefix: str, cross: bool = False):
+        s[f"{prefix}wq"] = ((L, d, H, hd), (None, "fsdp", "heads", "head_dim"), w_scale)
+        s[f"{prefix}wk"] = ((L, d, KV, hd), (None, "fsdp", "kv_heads", "head_dim"), w_scale)
+        s[f"{prefix}wv"] = ((L, d, KV, hd), (None, "fsdp", "kv_heads", "head_dim"), w_scale)
+        s[f"{prefix}wo"] = ((L, H, hd, d), (None, "heads", "head_dim", "fsdp"), o_scale)
+        if cfg.qkv_bias and not cross:
+            s[f"{prefix}bq"] = ((L, H, hd), (None, "heads", "head_dim"), 0.0)
+            s[f"{prefix}bk"] = ((L, KV, hd), (None, "kv_heads", "head_dim"), 0.0)
+            s[f"{prefix}bv"] = ((L, KV, hd), (None, "kv_heads", "head_dim"), 0.0)
+        if cfg.qk_norm and not cross:
+            s[f"{prefix}q_norm"] = ((L, hd), (None, None), 0.0)
+            s[f"{prefix}k_norm"] = ((L, hd), (None, None), 0.0)
+
+    def dense_mlp(prefix: str, width: int):
+        if cfg.mlp_act in ("silu", "geglu"):
+            s[f"{prefix}w_gate"] = ((L, d, width), (None, "fsdp", "mlp"), w_scale)
+        s[f"{prefix}w_in"] = ((L, d, width), (None, "fsdp", "mlp"), w_scale)
+        s[f"{prefix}w_out"] = ((L, width, d), (None, "mlp", "fsdp"), o_scale)
+
+    def ssm_params(prefix: str):
+        sp = cfg.ssm
+        d_inner = sp.expand * d
+        nh = d_inner // sp.head_dim
+        conv_dim = d_inner + 2 * sp.n_groups * sp.d_state
+        d_proj = 2 * d_inner + 2 * sp.n_groups * sp.d_state + nh
+        s[f"{prefix}in_proj"] = ((L, d, d_proj), (None, "fsdp", "mlp"), w_scale)
+        s[f"{prefix}conv_w"] = ((L, sp.conv_width, conv_dim), (None, None, "mlp"), 0.1)
+        s[f"{prefix}conv_b"] = ((L, conv_dim), (None, "mlp"), 0.0)
+        s[f"{prefix}dt_bias"] = ((L, nh), (None, "heads"), 0.1)
+        s[f"{prefix}A_log"] = ((L, nh), (None, "heads"), 0.1)
+        s[f"{prefix}D"] = ((L, nh), (None, "heads"), 0.1)
+        s[f"{prefix}norm"] = ((L, d_inner), (None, "mlp"), 0.0)
+        s[f"{prefix}out_proj"] = ((L, d_inner, d), (None, "mlp", "fsdp"), o_scale)
+
+    s["ln1"] = ((L, d), (None, None), 0.0)
+    if cfg.block in ("attn", "hybrid"):
+        attn("")
+    if cfg.block in ("ssm", "hybrid"):
+        ssm_params("ssm_")
+    if cfg.moe is not None:
+        m = cfg.moe
+        E = m.padded_experts()
+        s["ln2"] = ((L, d), (None, None), 0.0)
+        s["router"] = ((L, d, m.num_experts), (None, "fsdp", None), w_scale)
+        s["moe_w_gate"] = ((L, E, d, m.d_ff_expert),
+                          (None, "experts", "fsdp", "expert_mlp"), w_scale)
+        s["moe_w_in"] = ((L, E, d, m.d_ff_expert),
+                        (None, "experts", "fsdp", "expert_mlp"), w_scale)
+        s["moe_w_out"] = ((L, E, m.d_ff_expert, d),
+                         (None, "experts", "expert_mlp", "fsdp"), o_scale)
+        if m.num_shared:
+            fs = m.num_shared * m.d_ff_expert
+            s["shared_w_gate"] = ((L, d, fs), (None, "fsdp", "mlp"), w_scale)
+            s["shared_w_in"] = ((L, d, fs), (None, "fsdp", "mlp"), w_scale)
+            s["shared_w_out"] = ((L, fs, d), (None, "mlp", "fsdp"), o_scale)
+            s["shared_gate"] = ((L, d, 1), (None, "fsdp", None), w_scale)
+    elif cfg.d_ff:
+        s["ln2"] = ((L, d), (None, None), 0.0)
+        dense_mlp("", f)
+
+    if cfg.enc_dec:
+        # encoder stack (bidirectional, no cache) + decoder cross-attention
+        Le = cfg.enc_layers
+        for nm, shp, names, sc in [
+            ("enc_wq", (Le, d, H, hd), (None, "fsdp", "heads", "head_dim"), w_scale),
+            ("enc_wk", (Le, d, KV, hd), (None, "fsdp", "kv_heads", "head_dim"), w_scale),
+            ("enc_wv", (Le, d, KV, hd), (None, "fsdp", "kv_heads", "head_dim"), w_scale),
+            ("enc_wo", (Le, H, hd, d), (None, "heads", "head_dim", "fsdp"), o_scale),
+            ("enc_w_in", (Le, d, f), (None, "fsdp", "mlp"), w_scale),
+            ("enc_w_out", (Le, f, d), (None, "mlp", "fsdp"), o_scale),
+            ("enc_ln1", (Le, d), (None, None), 0.0),
+            ("enc_ln2", (Le, d), (None, None), 0.0),
+            ("enc_final_norm", (d,), (None,), 0.0),
+            ("xattn_wq", (L, d, H, hd), (None, "fsdp", "heads", "head_dim"), w_scale),
+            ("xattn_wk", (L, d, KV, hd), (None, "fsdp", "kv_heads", "head_dim"), w_scale),
+            ("xattn_wv", (L, d, KV, hd), (None, "fsdp", "kv_heads", "head_dim"), w_scale),
+            ("xattn_wo", (L, H, hd, d), (None, "heads", "head_dim", "fsdp"), o_scale),
+            ("ln_x", (L, d), (None, None), 0.0),
+        ]:
+            s[nm] = (shp, names, sc)
+    return s
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, Array]:
+    sch = _schema(cfg)
+    keys = jax.random.split(key, len(sch))
+    params = {}
+    for (name, (shape, _, scale)), k in zip(sorted(sch.items()), keys):
+        if scale == 0.0:
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name.endswith(("A_log", "dt_bias", "D")):
+            params[name] = jnp.ones(shape, jnp.float32) * 0.5
+        else:
+            params[name] = jax.random.normal(k, shape, jnp.float32) * scale
+    return params
+
+
+def abstract_params(cfg: ModelConfig) -> dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for the dry-run — no allocation."""
+    return {name: jax.ShapeDtypeStruct(shape, jnp.float32)
+            for name, (shape, _, _) in _schema(cfg).items()}
+
+
+def param_logical(cfg: ModelConfig) -> dict[str, tuple]:
+    return {name: names for name, (_, names, _) in _schema(cfg).items()}
+
+
+def global_flags(cfg: ModelConfig) -> np.ndarray:
+    """Per-layer bool: True = full/global attention, False = sliding window."""
+    if cfg.num_layers == 0:
+        return np.zeros(0, bool)
+    if cfg.sliding_window is None:
+        return np.ones(cfg.num_layers, bool)
+    if cfg.global_every is not None:
+        return np.array([(i + 1) % cfg.global_every == 0
+                         for i in range(cfg.num_layers)])
+    # hybrid default (Hymba): first / middle / last layers global
+    flags = np.zeros(cfg.num_layers, bool)
+    flags[[0, cfg.num_layers // 2, cfg.num_layers - 1]] = True
+    return flags
+
+
+# ------------------------------------------------------------------ caches
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> dict[str, Any]:
+    """Decode-state pytree.  Full-length KV caches (windows applied as
+    masks — memory is fine at the assigned shapes once sharded)."""
+    L, KV, hd = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    mk = (jax.ShapeDtypeStruct if abstract
+          else lambda s, d: jnp.zeros(s, d))
+    cache: dict[str, Any] = {"pos": (jax.ShapeDtypeStruct((), jnp.int32)
+                                     if abstract else jnp.zeros((), jnp.int32))}
+    if cfg.block in ("attn", "hybrid"):
+        cache["k"] = mk((L, batch, max_len, KV, hd), COMPUTE_DTYPE)
+        cache["v"] = mk((L, batch, max_len, KV, hd), COMPUTE_DTYPE)
+    if cfg.block in ("ssm", "hybrid"):
+        sp = cfg.ssm
+        d_inner = sp.expand * cfg.d_model
+        nh = d_inner // sp.head_dim
+        conv_dim = d_inner + 2 * sp.n_groups * sp.d_state
+        cache["conv"] = mk((L, batch, sp.conv_width - 1, conv_dim), COMPUTE_DTYPE)
+        cache["ssm"] = mk((L, batch, nh, sp.head_dim, sp.d_state), jnp.float32)
+    if cfg.enc_dec:
+        cache["xk"] = mk((L, batch, cfg.enc_frames, KV, hd), COMPUTE_DTYPE)
+        cache["xv"] = mk((L, batch, cfg.enc_frames, KV, hd), COMPUTE_DTYPE)
+    return cache
+
+
+def cache_logical(cfg: ModelConfig) -> dict[str, tuple]:
+    names: dict[str, tuple] = {"pos": ()}
+    if cfg.block in ("attn", "hybrid"):
+        names["k"] = (None, "batch", None, "kv_heads", "head_dim")
+        names["v"] = (None, "batch", None, "kv_heads", "head_dim")
+    if cfg.block in ("ssm", "hybrid"):
+        names["conv"] = (None, "batch", None, "mlp")
+        names["ssm"] = (None, "batch", "heads", None, "state")
+    if cfg.enc_dec:
+        names["xk"] = (None, "batch", None, "kv_heads", "head_dim")
+        names["xv"] = (None, "batch", None, "kv_heads", "head_dim")
+    return names
+
+
+# ----------------------------------------------------------------- forward
+def _remat_policy(cfg: ModelConfig):
+    """"full" saves nothing (recompute the layer in bwd — the flash-attention
+    internals must NOT be saved or remat is defeated); "dots" saves matmul
+    outputs (cheaper recompute, ~L x more activation memory)."""
+    if cfg.remat == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return jax.checkpoint_policies.nothing_saveable
+
+
+def _sinusoidal(positions: Array, d: int) -> Array:
+    half = d // 2
+    freqs = jnp.exp(-math.log(10000.0) * jnp.arange(half) / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attention_sub(p, x_norm, cfg, *, mode, angles, is_global, cache_k,
+                   cache_v, pos, kv_len, prefix="", cross_kv=None):
+    """Shared attention for decoder self-attn, cross-attn and encoder."""
+    B, S, _ = x_norm.shape
+    dt = x_norm.dtype
+    q = jnp.einsum("bsd,dhk->bshk", x_norm, p[f"{prefix}wq"].astype(dt))
+    if f"{prefix}bq" in p:
+        q = q + p[f"{prefix}bq"].astype(dt)
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dhk->bshk", x_norm, p[f"{prefix}wk"].astype(dt))
+        v = jnp.einsum("bsd,dhk->bshk", x_norm, p[f"{prefix}wv"].astype(dt))
+        if f"{prefix}bk" in p:
+            k = k + p[f"{prefix}bk"].astype(dt)
+            v = v + p[f"{prefix}bv"].astype(dt)
+    else:
+        k, v = cross_kv
+    if cfg.qk_norm and f"{prefix}q_norm" in p:
+        q = rms_norm(q, p[f"{prefix}q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p[f"{prefix}k_norm"], cfg.norm_eps) if cross_kv is None else k
+    if angles is not None and cross_kv is None:
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+    q = constrain(q, ("batch", None, "heads", "head_dim"))
+
+    window = cfg.sliding_window
+    new_k = new_v = None
+    if mode == "decode" and cross_kv is None:
+        new_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, pos, axis=1)
+        new_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, pos, axis=1)
+        mask = AttnMask(True, window, pos, kv_len)
+        mask = _apply_global(mask, is_global)
+        out = decode_attention(q, new_k, new_v, mask)
+    elif mode == "decode":
+        mask = AttnMask(False, None, 0, kv_len)
+        out = decode_attention(q, cache_k, cache_v, mask)
+    else:
+        causal = cross_kv is None
+        mask = AttnMask(causal, window if cross_kv is None else None, 0, None)
+        mask = _apply_global(mask, is_global)
+        skip = cfg.flash_block_skip and mask.causal
+        if cfg.ulysses_attn:
+            # Ulysses: a2a q to sequence-sharded full-head layout; replicate
+            # the (small, GQA) k/v over TP.  Flash then runs without any
+            # collective inside its chunk loops.
+            q = constrain(q, ("batch", "seq_sp", None, None))
+            k = constrain(k, ("batch", None, None, None))
+            v = constrain(v, ("batch", None, None, None))
+        out = flash_attention_vjp(q, k, v, causal=mask.causal,
+                                  window=mask.window, q_offset=0, kv_len=None,
+                                  block_skip=skip,
+                                  kv_chunk=512 if skip else 1024)
+        if cfg.ulysses_attn:
+            out = constrain(out, ("batch", None, "heads", "head_dim"))
+        if cross_kv is None:
+            new_k, new_v = k, v
+    y = jnp.einsum("bshk,hkd->bsd", out, p[f"{prefix}wo"].astype(dt))
+    return y, (new_k, new_v)
+
+
+def _apply_global(mask: AttnMask, is_global) -> AttnMask:
+    """Per-layer global flag (scanned): a global layer disables the window."""
+    if mask.window is None or is_global is None:
+        return mask
+    if isinstance(is_global, (bool, np.bool_)):
+        return mask._replace(window=None) if is_global else mask
+    # traced flag: widen the window to "infinite" arithmetically
+    window = jnp.where(is_global, jnp.int32(2**30), jnp.int32(mask.window))
+    return mask._replace(window=window)
+
+
+def _decoder_layer(x, p, cfg, *, mode, angles, is_global, cache, pos, kv_len,
+                   enc_out=None):
+    dt = x.dtype
+    if cfg.seq_sharded and mode == "train":
+        # Megatron-SP: the carry (and therefore every remat-saved per-layer
+        # activation) lives sequence-sharded over the TP axis; attention /
+        # matmuls gather what they need transiently inside the layer.
+        x = constrain(x, ("batch", "seq_sp", None))
+    h = rms_norm(x, p["ln1"], cfg.norm_eps)
+    mix = jnp.zeros_like(x)
+    new_cache = {}
+
+    if cfg.block in ("attn", "hybrid"):
+        attn_out, (nk, nv) = _attention_sub(
+            p, h, cfg, mode=mode, angles=angles, is_global=is_global,
+            cache_k=cache.get("k"), cache_v=cache.get("v"),
+            pos=pos, kv_len=kv_len)
+        mix = mix + attn_out
+        if mode != "train" and nk is not None:
+            new_cache["k"] = nk.astype(COMPUTE_DTYPE)
+            new_cache["v"] = nv.astype(COMPUTE_DTYPE)
+
+    if cfg.block in ("ssm", "hybrid"):
+        ssm_state = ({"conv": cache["conv"].astype(dt), "ssm": cache["ssm"]}
+                     if mode == "decode" else None)
+        ssm_out, new_state = ssm_lib.mamba2_mix(
+            {k[4:]: v for k, v in p.items() if k.startswith("ssm_")},
+            h, cfg, mode=("step" if mode == "decode" else "full"),
+            state=ssm_state)
+        mix = mix + ssm_out
+        if mode != "train":
+            new_cache["conv"] = new_state["conv"].astype(COMPUTE_DTYPE)
+            new_cache["ssm"] = new_state["ssm"]
+
+    if cfg.block == "hybrid":
+        mix = mix * 0.5                       # average the parallel heads
+
+    if cfg.enc_dec:
+        # cross-attention (cache holds projected encoder K/V)
+        xh = rms_norm(x + mix, p["ln_x"], cfg.norm_eps)
+        if mode != "decode":
+            xk = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn_wk"].astype(dt))
+            xv = jnp.einsum("bsd,dhk->bshk", enc_out, p["xattn_wv"].astype(dt))
+        else:
+            xk, xv = cache["xk"], cache["xv"]
+        xattn, _ = _attention_sub(
+            p, xh, cfg, mode=("decode" if mode == "decode" else "train"),
+            angles=None, is_global=None, cache_k=xk, cache_v=xv,
+            pos=pos, kv_len=None, prefix="xattn_", cross_kv=(xk, xv))
+        mix = mix + xattn
+        if mode != "train":
+            new_cache["xk"], new_cache["xv"] = xk, xv
+
+    if cfg.parallel_block and cfg.moe is None and cfg.d_ff:
+        y = x + mix + mlp(h, {k2: p[k2] for k2 in ("w_in", "w_gate", "w_out")
+                              if k2 in p}, cfg.mlp_act)
+        if cfg.seq_sharded and mode == "train":
+            y = constrain(y, ("batch", "seq_sp", None))
+        return y, new_cache
+
+    x = x + mix
+    if cfg.moe is not None:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        mo = {"router": p["router"], "w_gate": p["moe_w_gate"],
+              "w_in": p["moe_w_in"], "w_out": p["moe_w_out"]}
+        for nm in ("shared_w_gate", "shared_w_in", "shared_w_out", "shared_gate"):
+            if nm in p:
+                mo[nm] = p[nm]
+        y = x + moe_lib.moe_ffn(h2, mo, cfg.moe, cfg.mlp_act)
+    elif cfg.d_ff:
+        h2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        y = x + mlp(h2, p, cfg.mlp_act)
+    else:
+        y = x
+    if cfg.seq_sharded and mode == "train":
+        y = constrain(y, ("batch", "seq_sp", None))
+    return y, new_cache
+
+
+def _encoder(params, cfg, frames: Array) -> Array:
+    """Whisper-style encoder over precomputed frame embeddings (conv
+    frontend is a stub per the assignment): bidirectional attention."""
+    B, F, d = frames.shape
+    x = (frames + _sinusoidal(jnp.arange(F)[None].repeat(B, 0), d)
+         ).astype(COMPUTE_DTYPE)
+
+    def body(x, lp):
+        h = rms_norm(x, lp["enc_ln1"], cfg.norm_eps)
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["enc_wq"].astype(x.dtype))
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["enc_wk"].astype(x.dtype))
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["enc_wv"].astype(x.dtype))
+        out = flash_attention_vjp(q, k, v, causal=False)
+        x = x + jnp.einsum("bshk,hkd->bsd", out, lp["enc_wo"].astype(x.dtype))
+        h2 = rms_norm(x, lp["enc_ln2"], cfg.norm_eps)
+        hh = jnp.einsum("bsd,df->bsf", h2, lp["enc_w_in"].astype(x.dtype))
+        hh = jax.nn.gelu(hh, approximate=True)
+        x = x + jnp.einsum("bsf,fd->bsd", hh, lp["enc_w_out"].astype(x.dtype))
+        return x, None
+
+    layer_params = {k: v for k, v in params.items()
+                    if k.startswith("enc_") and k != "enc_final_norm"}
+    body_fn = body
+    if cfg.remat != "none":
+        body_fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+    x, _ = jax.lax.scan(body_fn, x, layer_params)
+    return rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+_LAYER_KEYS_CACHE: dict[str, tuple] = {}
+
+
+def _split_layer_params(params: dict, cfg: ModelConfig):
+    """Split the flat param dict into (global, stacked-per-layer) parts."""
+    enc = {"enc_wq", "enc_wk", "enc_wv", "enc_wo", "enc_w_in", "enc_w_out",
+           "enc_ln1", "enc_ln2"}
+    glob = {"embed", "final_norm", "lm_head", "enc_final_norm"}
+    layer = {k: v for k, v in params.items()
+             if k not in glob and k not in enc}
+    return layer
+
+
+def model_forward(params: dict, cfg: ModelConfig, tokens: Array, *,
+                  visual: Array | None = None,
+                  mrope_positions: Array | None = None,
+                  frames: Array | None = None,
+                  mode: str = "train",
+                  cache: dict | None = None,
+                  max_len: int | None = None,
+                  return_hidden: bool = False):
+    """Returns (logits, new_cache).
+
+    train   : tokens (B, S) -> logits (B, S, Vp), cache None
+    prefill : tokens (B, S) -> last-position logits (B, 1, Vp) + cache
+    decode  : tokens (B, 1) + cache -> logits (B, 1, Vp) + cache
+    """
+    B, S = tokens.shape
+    dt = COMPUTE_DTYPE
+    pos0 = cache["pos"] if (cache is not None and mode == "decode") else 0
+
+    x = jnp.take(params["embed"], tokens, axis=0).astype(dt)
+    if cfg.vlm and visual is not None:
+        V = visual.shape[1]
+        vis = jnp.pad(visual.astype(dt), ((0, 0), (0, S - V), (0, 0)))
+        is_vis = (jnp.arange(S) < V)[None, :, None]
+        x = jnp.where(is_vis, vis, x)
+    x = constrain(x, ("batch", "seq", "embed"))
+
+    # positions / rope angles
+    if cfg.rope == "mrope":
+        if mrope_positions is None:
+            base = pos0 + jnp.arange(S)[None]
+            mrope_positions = jnp.broadcast_to(base, (3, B, S))
+        angles = rope_angles(mrope_positions, cfg.head_dim, cfg.rope_theta,
+                             cfg.mrope_sections)
+    elif cfg.rope == "rope":
+        positions = pos0 + jnp.arange(S)[None]
+        angles = rope_angles(jnp.broadcast_to(positions, (B, S)),
+                             cfg.head_dim, cfg.rope_theta)
+    else:
+        angles = None
+
+    enc_out = None
+    if cfg.enc_dec and frames is not None:
+        enc_out = _encoder(params, cfg, frames)
+
+    flags = jnp.asarray(global_flags(cfg))
+    layer_params = _split_layer_params(params, cfg)
+    kv_len = (pos0 + 1) if mode == "decode" else None
+
+    def body(x, scanned):
+        lp, flag, layer_cache = scanned
+        y, new_cache = _decoder_layer(
+            x, lp, cfg, mode=mode, angles=angles, is_global=flag,
+            cache=layer_cache, pos=pos0, kv_len=kv_len, enc_out=enc_out)
+        return y, new_cache
+
+    body_fn = body
+    if cfg.remat != "none" and mode == "train":
+        body_fn = jax.checkpoint(body, policy=_remat_policy(cfg))
+
+    if cache is not None:
+        layer_caches = {k: v for k, v in cache.items() if k != "pos"}
+    else:
+        layer_caches = _empty_caches(cfg, B, S)
+
+    x, new_caches = jax.lax.scan(body_fn, x, (layer_params, flags, layer_caches))
+
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if mode == "train" and return_hidden:
+        return x, None
+    if mode == "prefill":
+        x = x[:, -1:]
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(dt))
+    logits = constrain(logits, ("batch", None, "vocab"))
+    if cfg.logit_softcap:
+        c = cfg.logit_softcap
+        logits = jnp.tanh(logits / c) * c
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        new_cache = dict(new_caches)
+        if mode == "prefill" and max_len is not None and max_len > S:
+            for nm in ("k", "v"):
+                if nm in new_cache:
+                    pad = [(0, 0)] * new_cache[nm].ndim
+                    pad[2] = (0, max_len - S)
+                    new_cache[nm] = jnp.pad(new_cache[nm], pad)
+        new_cache["pos"] = ((pos0 + 1) if mode == "decode"
+                            else jnp.asarray(S, jnp.int32))
+    return logits, new_cache
+
+
+def _empty_caches(cfg: ModelConfig, B: int, S: int) -> dict:
+    """Per-layer cache placeholders for train/prefill scan xs (zero-size
+    where the mode produces the cache itself)."""
+    out: dict[str, Array] = {}
+    L = cfg.num_layers
+    if cfg.block in ("ssm", "hybrid"):
+        sp = cfg.ssm
+        d_inner = sp.expand * cfg.d_model
+        nh = d_inner // sp.head_dim
+        conv_dim = d_inner + 2 * sp.n_groups * sp.d_state
+        out["conv"] = jnp.zeros((L, B, sp.conv_width - 1, conv_dim), COMPUTE_DTYPE)
+        out["ssm"] = jnp.zeros((L, B, nh, sp.head_dim, sp.d_state), jnp.float32)
+    if cfg.block in ("attn", "hybrid"):
+        out["k"] = jnp.zeros((L, B, 0, cfg.num_kv_heads, cfg.head_dim), COMPUTE_DTYPE)
+        out["v"] = jnp.zeros((L, B, 0, cfg.num_kv_heads, cfg.head_dim), COMPUTE_DTYPE)
+    if cfg.enc_dec:
+        out["xk"] = jnp.zeros((L, B, 0, cfg.num_kv_heads, cfg.head_dim), COMPUTE_DTYPE)
+        out["xv"] = jnp.zeros((L, B, 0, cfg.num_kv_heads, cfg.head_dim), COMPUTE_DTYPE)
+    return out
+
+
+# -------------------------------------------------------------------- loss
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict) -> tuple[Array, dict]:
+    """Next-token cross-entropy via the fused vocab-parallel chunked loss —
+    full (B, S, V) logits are never materialized (see models/loss.py)."""
+    from repro.models.loss import fused_ce_loss
+    hidden, _ = model_forward(
+        params, cfg, batch["tokens"],
+        visual=batch.get("visual"), mrope_positions=batch.get("mrope_positions"),
+        frames=batch.get("frames"), mode="train", return_hidden=True)
+    head = (params["embed"].T if cfg.tie_embeddings else params["lm_head"])
+    loss, tokens = fused_ce_loss(
+        hidden, head.astype(hidden.dtype), batch["labels"],
+        valid_vocab=cfg.vocab_size)
+    return loss, {"loss": loss, "tokens": tokens}

@@ -1,0 +1,93 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity buffers.
+
+Dispatch strategy (TPU-minded): instead of the classic (tokens x experts x
+capacity) one-hot einsum — whose dispatch tensor is O(T*E*C) and explodes at
+32k sequences — assignments are sorted by expert and scattered into a dense
+(E, C, d_model) buffer, giving a static-shape grouped GEMM that the MXU
+likes and GSPMD can shard (tokens over ``data``, expert FFN over ``model``).
+Overflow beyond capacity is dropped (standard capacity-factor semantics);
+the smoke tests check conservation when capacity is ample.
+
+Shared experts (Qwen2-MoE, Granite-MoE) are fused into one wide gated MLP
+with a sigmoid gate, matching the reference implementations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def _capacity(T: int, top_k: int, num_experts: int, factor: float) -> int:
+    c = int(T * top_k * factor / num_experts) + 1
+    return -(-c // 8) * 8     # pad to 8 for lane alignment
+
+
+def moe_ffn(x: Array, p: dict, spec, act: str = "silu") -> Array:
+    """x (B, S, d) -> (B, S, d).  p: router (d, E); experts w_gate/w_in
+    (E, d, fe), w_out (E, fe, d); optional shared_* for shared experts."""
+    B, S, d = x.shape
+    T = B * S
+    E, k = spec.num_experts, spec.top_k
+    E_buf = spec.padded_experts()     # >= E; padded experts get no tokens
+    C = _capacity(T, k, E, spec.capacity_factor)
+
+    xf = x.reshape(T, d)
+    logits = jnp.einsum("td,de->te", xf, p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_idx = jax.lax.top_k(probs, k)          # (T, k)
+    if spec.router_norm:
+        gate_vals = gate_vals / gate_vals.sum(axis=-1, keepdims=True)
+
+    # Flatten assignments and rank them within their expert.
+    a_expert = expert_idx.reshape(-1)                         # (A,) A = T*k
+    a_token = jnp.repeat(jnp.arange(T), k)
+    a_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(a_expert, stable=True)
+    sorted_expert = a_expert[order]
+    # position within expert: index in sorted order minus expert start
+    counts = jnp.bincount(a_expert, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(T * k) - starts[sorted_expert]
+    pos = jnp.zeros_like(pos_sorted).at[order].set(pos_sorted)
+    keep = pos < C
+
+    # Scatter tokens into the (E_buf, C, d) buffer; dropped tokens go
+    # nowhere.  With ep_pad, E_buf divides the TP axis and the buffer (and
+    # expert weights) shard expert-parallel.
+    slot = jnp.where(keep, a_expert * C + pos, E_buf * C)     # OOB -> dropped
+    buf = jnp.zeros((E_buf * C + 1, d), x.dtype).at[slot].set(
+        xf[a_token], mode="drop")
+    buf = buf[:-1].reshape(E_buf, C, d)
+    buf = constrain(buf, ("experts", "batch", None))
+
+    # Grouped expert GEMMs (E batched), TP on the expert hidden dim.
+    h = jnp.einsum("ecd,edf->ecf", buf, p["w_in"].astype(x.dtype))
+    if act in ("silu", "geglu"):
+        g = jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype))
+        g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g, approximate=True)
+        h = g * h
+    else:
+        h = jax.nn.gelu(h, approximate=True)
+    h = constrain(h, ("experts", "batch", "expert_mlp"))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(x.dtype))
+    y_buf = y_buf.reshape(E_buf * C, d)
+
+    # Gather back with gate weights (dropped tokens contribute 0).
+    contrib = y_buf[jnp.minimum(slot, E_buf * C - 1)] * (
+        a_gate * keep).astype(x.dtype)[:, None]
+    out = jnp.zeros((T, d), x.dtype).at[a_token].add(contrib)
+
+    if "shared_w_in" in p:
+        sh = {"w_in": p["shared_w_in"], "w_gate": p["shared_w_gate"],
+              "w_out": p["shared_w_out"]}
+        from repro.models.layers import mlp
+        shared = mlp(x, sh, act)
+        sgate = jax.nn.sigmoid(
+            jnp.einsum("bsd,dz->bsz", x, p["shared_gate"].astype(x.dtype)))
+        out = out.reshape(B, S, d) + sgate * shared
+        return out
+    return out.reshape(B, S, d)

@@ -1,0 +1,216 @@
+"""Mamba2 (SSD — state-space duality) blocks.
+
+Three execution forms of the same recurrence
+    h_t = exp(dt_t A) h_{t-1} + dt_t * (B_t ⊗ x_t),   y_t = C_t · h_t + D x_t
+  * ``ssd_chunked``    — training/prefill: intra-chunk quadratic (MXU
+                         friendly) + inter-chunk scan over chunk states.
+  * ``ssd_recurrent``  — decode: O(1) per-token state update.
+  * ``ssd_sequential`` — pure scan oracle used by the test suite.
+
+Shapes: x (B,S,nh,hp), dt (B,S,nh), A (nh,), B/C (B,S,ng,ds), D (nh,).
+Heads are grouped: head h uses B/C group h // (nh // ng).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import constrain
+
+Array = jax.Array
+
+
+def _expand_groups(bc: Array, nh: int) -> Array:
+    """(B, S, ng, ds) -> (B, S, nh, ds) by repeating groups."""
+    ng = bc.shape[2]
+    return jnp.repeat(bc, nh // ng, axis=2)
+
+
+def ssd_sequential(x, dt, A, B, C, D, *, h0=None):
+    """Oracle: step-by-step recurrence.  Returns (y, final_state)."""
+    Bt, S, nh, hp = x.shape
+    ds = B.shape[-1]
+    Bh, Ch = _expand_groups(B, nh), _expand_groups(C, nh)
+    h = jnp.zeros((Bt, nh, hp, ds), jnp.float32) if h0 is None else h0
+
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        decay = jnp.exp(dt_t * A)[..., None, None]            # (B,nh,1,1)
+        upd = (dt_t[..., None] * x_t)[..., None] * b_t[:, :, None, :]
+        h = h * decay + upd                                   # (B,nh,hp,ds)
+        y = jnp.einsum("bhps,bhs->bhp", h, c_t) + D[None, :, None] * x_t
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(dt, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Bh, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(Ch, 1, 0).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h
+
+
+def ssd_recurrent(h, x_t, dt_t, A, B_t, C_t, D):
+    """One decode step.  h (B,nh,hp,ds); x_t (B,nh,hp); dt_t (B,nh);
+    B_t/C_t (B,ng,ds).  Returns (y_t, h_new)."""
+    nh = x_t.shape[1]
+    b = _expand_groups(B_t[:, None], nh)[:, 0]
+    c = _expand_groups(C_t[:, None], nh)[:, 0]
+    decay = jnp.exp(dt_t.astype(jnp.float32) * A)[..., None, None]
+    upd = (dt_t[..., None] * x_t).astype(jnp.float32)[..., None] * \
+        b.astype(jnp.float32)[:, :, None, :]
+    h = h * decay + upd
+    y = jnp.einsum("bhps,bhs->bhp", h, c.astype(jnp.float32))
+    y = y + D[None, :, None] * x_t.astype(jnp.float32)
+    return y.astype(x_t.dtype), h
+
+
+def ssd_chunked(x, dt, A, B, C, D, *, chunk: int = 128, h0=None):
+    """Chunked SSD.  Returns (y, final_state).  S % chunk == 0 (callers pad).
+    """
+    Bt, S, nh, hp = x.shape
+    ds = B.shape[-1]
+    assert S % chunk == 0
+    nc, cl = S // chunk, chunk
+    f32 = jnp.float32
+
+    xr = x.reshape(Bt, nc, cl, nh, hp).astype(f32)
+    dtr = dt.reshape(Bt, nc, cl, nh).astype(f32)
+    Br = _expand_groups(B, nh).reshape(Bt, nc, cl, nh, ds).astype(f32)
+    Cr = _expand_groups(C, nh).reshape(Bt, nc, cl, nh, ds).astype(f32)
+
+    dA = dtr * A                                            # (B,nc,cl,nh)
+    cum = jnp.cumsum(dA, axis=2)                            # inclusive
+    # decay from position j (exclusive) to i (inclusive), i >= j:
+    #   exp(cum_i - cum_j)  — matches h_i = prod_{t=j+1..i} exp(dA_t) h_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]     # (B,nc,i,j,nh)
+    ii = jnp.arange(cl)
+    tri = (ii[:, None] >= ii[None, :])
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    # intra-chunk: y[i] += C_i . sum_{j<=i} L_ij dt_j (B_j ⊗ x_j)
+    cb = jnp.einsum("bnihs,bnjhs->bnijh", Cr, Br)           # (B,nc,i,j,nh)
+    y_diag = jnp.einsum("bnijh,bnijh,bnjh,bnjhp->bnihp",
+                        cb, L, dtr, xr)
+
+    # chunk states: contribution of chunk c to the state at its end
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,cl,nh)
+    states = jnp.einsum("bnjh,bnjh,bnjhs,bnjhp->bnhps",
+                        decay_to_end, dtr, Br, xr)          # (B,nc,nh,hp,ds)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                 # (B,nc,nh)
+    h_init = (jnp.zeros((Bt, nh, hp, ds), f32) if h0 is None
+              else h0.astype(f32))
+
+    def chunk_step(h, inp):
+        st, dec = inp
+        h_prev = h
+        h = h * dec[..., None, None] + st
+        return h, h_prev
+
+    (h_final, h_prevs) = jax.lax.scan(
+        chunk_step, h_init,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                   # (B,nc,nh,hp,ds)
+
+    # off-diagonal: y[i] += C_i . (h_prev decayed to i)
+    state_decay = jnp.exp(cum)                              # (B,nc,cl,nh)
+    y_off = jnp.einsum("bnihs,bnih,bnhps->bnihp",
+                       Cr, state_decay, h_prevs)
+
+    y = (y_diag + y_off).reshape(Bt, S, nh, hp)
+    y = y + (D[None, None, :, None] * x.astype(f32))
+    return y.astype(x.dtype), h_final
+
+
+# ------------------------------------------------------------ full block ops
+def causal_conv(x: Array, w: Array, b: Array) -> Array:
+    """Depthwise causal conv1d.  x (B, S, C), w (K, C), b (C,)."""
+    K, Cdim = w.shape
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w.astype(jnp.float32)[:, None, :],       # (K, 1, C)
+        window_strides=(1,), padding="VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=Cdim)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def conv_step(conv_state: Array, x_t: Array, w: Array, b: Array
+              ) -> tuple[Array, Array]:
+    """One decode step of the causal conv.  conv_state (B, K-1, C),
+    x_t (B, C).  Returns (y_t (B, C), new_state)."""
+    K, _ = w.shape
+    window = jnp.concatenate([conv_state, x_t[:, None, :]], axis=1)  # (B,K,C)
+    y = (window.astype(jnp.float32) * w.astype(jnp.float32)[None]).sum(axis=1)
+    y = (y + b.astype(jnp.float32)).astype(x_t.dtype)
+    return y, window[:, 1:]
+
+
+def mamba2_mix(p: dict, x: Array, cfg, *, mode: str,
+               state: dict | None = None):
+    """The Mamba2 mixer (replaces attention).  x (B, S, d).
+
+    mode: "full" (train/prefill; returns (y, new_state)) or
+          "step" (decode; S == 1, requires ``state``).
+    state = {"conv": (B, K-1, conv_dim), "ssm": (B, nh, hp, ds)}.
+    """
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    nh = d_inner // s.head_dim
+    ds, ng = s.d_state, s.n_groups
+    conv_dim = d_inner + 2 * ng * ds
+    B_, S_, _ = x.shape
+
+    proj = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(x.dtype))
+    z, xbc, dt_raw = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)
+
+    if mode == "step":
+        conv_out, conv_state = conv_step(state["conv"], xbc[:, 0],
+                                         p["conv_w"], p["conv_b"])
+        xbc = jax.nn.silu(conv_out)[:, None]
+    else:
+        xbc = jax.nn.silu(causal_conv(xbc, p["conv_w"], p["conv_b"]))
+
+    xs, Bc, Cc = jnp.split(xbc, [d_inner, d_inner + ng * ds], axis=-1)
+    xs = xs.reshape(B_, S_, nh, s.head_dim)
+    Bc = Bc.reshape(B_, S_, ng, ds)
+    Cc = Cc.reshape(B_, S_, ng, ds)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    D = p["D"].astype(jnp.float32)
+
+    if mode == "step":
+        y, h = ssd_recurrent(state["ssm"], xs[:, 0], dt[:, 0], A,
+                             Bc[:, 0], Cc[:, 0], D)
+        y = y[:, None]
+        new_state = {"conv": conv_state, "ssm": h}
+    else:
+        pad = -S_ % s.chunk
+        if pad:
+            xs = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+            Bc = jnp.pad(Bc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+            Cc = jnp.pad(Cc, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        h0 = state["ssm"] if state is not None else None
+        y, h = ssd_chunked(xs, dt, A, Bc, Cc, D, chunk=s.chunk, h0=h0)
+        y = y[:, :S_]
+        # conv decode-state: last K-1 pre-activation xbc inputs
+        xbc_pre = jnp.split(proj, [d_inner, d_inner + conv_dim], axis=-1)[1]
+        K = s.conv_width
+        tail = xbc_pre[:, -(K - 1):] if S_ >= K - 1 else jnp.pad(
+            xbc_pre, ((0, 0), (K - 1 - S_, 0), (0, 0)))
+        new_state = {"conv": tail, "ssm": h}
+
+    y = y.reshape(B_, S_, d_inner)
+    y = constrain(y, ("batch", None, "heads"))
+    # gated RMSNorm then out-projection
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    dtp = y.dtype
+    yf = y.astype(jnp.float32)
+    var = jnp.mean(yf * yf, axis=-1, keepdims=True)
+    y = (yf * jax.lax.rsqrt(var + cfg.norm_eps)
+         * (1.0 + p["norm"].astype(jnp.float32))).astype(dtp)
+    return jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(x.dtype)), new_state

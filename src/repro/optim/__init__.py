@@ -1,0 +1,3 @@
+from repro.optim.adamw import (  # noqa: F401
+    OptimConfig, init_opt_state, apply_updates, learning_rate,
+)

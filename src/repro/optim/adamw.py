@@ -1,0 +1,106 @@
+"""AdamW with warmup+cosine schedule, global-norm clipping and optional
+distributed-optimization tricks:
+
+  * ``moment_dtype=bfloat16`` — halves optimizer-state HBM (8-bit-Adam-lite);
+    states are sharded like their params so this stacks with ZeRO-3.
+  * ``grad_compression="int8"`` — per-tensor symmetric int8 quantization of
+    gradients before the update.  Under pjit the cross-replica reduction is
+    implicit, so on real hardware this is paired with a reduce-scatter of
+    the quantized payload; here it faithfully models the *numerics* of
+    compressed gradients (documented in DESIGN.md).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"        # float32 | bfloat16
+    grad_compression: str = "none"       # none | int8
+
+
+def learning_rate(cfg: OptimConfig, step: Array) -> Array:
+    step = step.astype(jnp.float32)
+    warm = step / max(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps) /
+                    max(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(math.pi * prog))
+    return cfg.peak_lr * jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def init_opt_state(params: Any, cfg: OptimConfig) -> dict:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_opt_state(params: Any, cfg: OptimConfig) -> dict:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    sds = lambda p: jax.ShapeDtypeStruct(p.shape, dt)
+    return {"m": jax.tree.map(sds, params),
+            "v": jax.tree.map(sds, params),
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+def _compress_int8(g: Array) -> Array:
+    """Symmetric per-tensor int8 quantize/dequantize (stochastic-free)."""
+    scale = jnp.maximum(jnp.abs(g).max(), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return q.astype(g.dtype) * scale
+
+
+def apply_updates(params: Any, grads: Any, state: dict, cfg: OptimConfig
+                  ) -> tuple[Any, dict, dict]:
+    """One AdamW step.  Returns (params, state, metrics)."""
+    if cfg.grad_compression == "int8":
+        grads = jax.tree.map(_compress_int8, grads)
+
+    gnorm = jnp.sqrt(sum(
+        jnp.sum(jnp.square(g.astype(jnp.float32)))
+        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    step = state["step"] + 1
+    lr = learning_rate(cfg, step)
+    b1c = 1 - cfg.b1 ** step.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** step.astype(jnp.float32)
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p
+        return (p - lr * delta).astype(p.dtype), m32.astype(mdt), v32.astype(mdt)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics

@@ -1,0 +1,3 @@
+from repro.parallel.sharding import (  # noqa: F401
+    LogicalRules, constrain, logical_spec, set_rules, get_rules, DEFAULT_RULES,
+)

@@ -1,0 +1,46 @@
+"""Serving steps: batched prefill (returns last-position logits + a KV/state
+cache padded to the decode horizon) and single-token decode."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import model_forward
+
+
+def make_prefill_step(cfg: ModelConfig, max_len: int | None = None):
+    def prefill_step(params, batch):
+        logits, cache = model_forward(
+            params, cfg, batch["tokens"],
+            visual=batch.get("visual"),
+            mrope_positions=batch.get("mrope_positions"),
+            frames=batch.get("frames"),
+            mode="prefill", max_len=max_len)
+        return logits, cache
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, batch):
+        logits, cache = model_forward(
+            params, cfg, batch["tokens"], cache=batch["cache"], mode="decode")
+        return logits, cache
+    return decode_step
+
+
+def greedy_generate(params, cfg: ModelConfig, tokens, steps: int,
+                    max_len: int | None = None, **kw):
+    """Simple batched greedy loop for the examples (prefill + N decodes)."""
+    B, S = tokens.shape
+    max_len = max_len or (S + steps)
+    logits, cache = model_forward(params, cfg, tokens, mode="prefill",
+                                  max_len=max_len, **kw)
+    out = [jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)]
+    for _ in range(steps - 1):
+        logits, cache = model_forward(params, cfg, out[-1][:, None],
+                                      cache=cache, mode="decode")
+        out.append(jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1))
+    return jnp.stack(out, axis=1)

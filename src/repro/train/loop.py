@@ -1,0 +1,70 @@
+"""Fault-tolerant training loop: bitmap-indexed data, checkpoint cadence,
+crash-safe restart, straggler-aware dispatch hooks.
+
+This is the single-host driver used by examples/train_lm.py; on a real
+cluster the same loop runs under jax.distributed with the production mesh
+(launch/train.py wires that up)."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Iterator
+
+import jax
+
+from repro.checkpoint.store import (CheckpointManager, latest_step,
+                                    restore_checkpoint)
+from repro.models.config import ModelConfig
+from repro.models.model import init_params
+from repro.optim.adamw import OptimConfig, init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 300
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    log_every: int = 10
+
+
+def train_loop(cfg: ModelConfig, tcfg: TrainConfig, lcfg: LoopConfig,
+               batches: Callable[[int], Iterator[dict]],
+               *, seed: int = 0, log=print) -> dict:
+    """Runs to ``total_steps`` with checkpoint/restart.  ``batches(start)``
+    must return a deterministic stream starting at ``start`` (the data
+    pipeline replays from the checkpointed step — see data/pipeline.py)."""
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    opt = init_opt_state(params, tcfg.optim)
+    start = 0
+
+    resume = latest_step(lcfg.ckpt_dir)
+    if resume is not None:
+        like = {"params": jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params),
+            "opt": jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), opt)}
+        restored, start = restore_checkpoint(lcfg.ckpt_dir, like)
+        params, opt = restored["params"], restored["opt"]
+        log(f"[restart] resumed from step {start}")
+
+    step_fn = jax.jit(make_train_step(cfg, tcfg))
+    mgr = CheckpointManager(lcfg.ckpt_dir, every_steps=lcfg.ckpt_every)
+    it = batches(start)
+    t0 = time.time()
+    metrics = {}
+    for step in range(start + 1, lcfg.total_steps + 1):
+        batch = next(it)
+        params, opt, metrics = step_fn(params, opt, batch)
+        if step % lcfg.log_every == 0 or step == lcfg.total_steps:
+            dt = time.time() - t0
+            log(f"step {step:5d} loss={float(metrics['loss']):.4f} "
+                f"lr={float(metrics['lr']):.2e} "
+                f"gnorm={float(metrics['grad_norm']):.2f} "
+                f"({dt / max(step - start, 1):.2f}s/step)")
+        mgr.maybe_save(step, {"params": params, "opt": opt})
+    mgr.maybe_save(lcfg.total_steps, {"params": params, "opt": opt},
+                   force=True)
+    mgr.wait()
+    return {"params": params, "opt": opt,
+            "final_loss": float(metrics.get("loss", float("nan")))}

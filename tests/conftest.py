@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Tests run on the real single CPU device — the 512-device override is
+# strictly for the dry-run (see launch/dryrun.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,121 @@
+"""BIC core behaviour: the paper's worked example, geometry accounting,
+multi-core equivalence, elastic scheduling and the power model anchors."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import power
+from repro.core.bic import BICConfig, BICCore, PaperConfig
+from repro.core.elastic import (ElasticScheduler, lpt_schedule,
+                                multicore_create_index, static_schedule)
+
+
+def test_paper_fig1_example():
+    """Nine objects, five attributes, query A2 AND A4 AND NOT A5."""
+    # records = objects; object j "contains" attribute value a
+    objects = [
+        [2, 4], [1, 2, 4], [2, 4, 5], [1, 5], [2, 3, 4],
+        [3, 5], [1, 2, 4], [4, 5], [2, 4],
+    ]
+    rec = np.full((9, 4), -1, np.int32)
+    for j, attrs in enumerate(objects):
+        rec[j, :len(attrs)] = attrs
+    keys = jnp.asarray([1, 2, 3, 4, 5], dtype=jnp.int32)
+    core = BICCore(BICConfig(num_keys=5, num_records=9, words_per_record=4))
+    bi = core.create(jnp.asarray(rec), keys)
+    # rows are 1-indexed attributes: include A2(idx1), A4(idx3), not A5(idx4)
+    res, cnt = core.query(bi, include=[1, 3], exclude=[4])
+    want = [j for j, a in enumerate(objects) if 2 in a and 4 in a and 5 not in a]
+    got = [j for j in range(9) if (int(res[j // 32]) >> (j % 32)) & 1]
+    assert got == want
+    assert int(cnt) == len(want)
+
+
+def test_paper_memory_accounting():
+    """Paper SIV: 32x32x8 = 8192 CAM bits + 16x8 buffer = 8320 bits."""
+    assert PaperConfig.memory_bits == 8320
+    assert abs(PaperConfig.memory_bits / 1024 - 8.125) < 1e-6
+
+
+def test_ref_vs_pallas_backends_agree():
+    rng = np.random.default_rng(0)
+    rec = jnp.asarray(rng.integers(0, 256, (16, 32), dtype=np.int32))
+    keys = jnp.asarray(rng.integers(0, 256, (8,), dtype=np.int32))
+    a = BICCore(BICConfig(backend="pallas")).create(rec, keys)
+    b = BICCore(BICConfig(backend="ref")).create(rec, keys)
+    np.testing.assert_array_equal(np.asarray(a.packed), np.asarray(b.packed))
+
+
+def test_multicore_matches_single_core():
+    rng = np.random.default_rng(1)
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    rec = jnp.asarray(rng.integers(0, 256, (4, 16, 32), dtype=np.int32))
+    keys = jnp.asarray(rng.integers(0, 256, (8,), dtype=np.int32))
+    out = multicore_create_index(rec, keys, mesh, use_kernels=False)
+    core = BICCore(PaperConfig)
+    for z in range(4):
+        want = core.create(rec[z], keys).packed
+        np.testing.assert_array_equal(np.asarray(out[z]), np.asarray(want))
+
+
+# ------------------------------------------------------------ power model
+def test_power_model_anchors():
+    a = power.PAPER_ANCHORS
+    assert abs(power.frequency(0.4) / 1e6 - a["freq_mhz"][0.4]) < 0.2
+    assert abs(power.frequency(1.2) / 1e6 - a["freq_mhz"][1.2]) < 0.2
+    assert abs(power.active_power(1.2) * 1e3 - a["active_mw"][1.2]) < 0.05
+    assert abs(power.energy_per_cycle(1.2) * 1e12 - a["energy_pj_12"]) < 1.0
+    assert abs(power.standby_power(0.4) * 1e6 - a["standby_cg_uw_04"]) < 0.2
+    rbb_nw = power.standby_power(0.4, -2.0) * 1e9
+    assert abs(rbb_nw - a["standby_rbb_nw_04"]) < 0.3
+    spb = power.standby_power_per_bit() * 1e12
+    assert abs(spb - a["spb_pw_bit"]) < 0.05
+
+
+def test_rbb_reduction_factor():
+    """CG-only -> CG+RBB must drop standby power by ~3 orders of magnitude
+    (paper: 10.6 uW -> 2.64 nW, i.e. ~4,000x)."""
+    ratio = power.standby_power(0.4) / power.standby_power(0.4, -2.0)
+    assert 3000 < ratio < 5000
+
+
+def test_gidl_crossover():
+    """Fig. 8: above ~0.8 V, deeper reverse bias stops helping (GIDL)."""
+    assert power.standby_current(0.4, -2.0) < power.standby_current(0.4, -1.5)
+    assert power.standby_current(1.2, -2.0) > power.standby_current(1.2, -1.5)
+
+
+def test_decade_per_half_volt():
+    """Fig. 8: each -0.5 V of V_bb cuts I_stb by ~10x (until the floor)."""
+    i0 = power.standby_current(0.4, 0.0)
+    i1 = power.standby_current(0.4, -0.5)
+    i2 = power.standby_current(0.4, -1.0)
+    assert 8 < i0 / i1 < 12
+    assert 8 < i1 / i2 < 12
+
+
+# --------------------------------------------------------------- elastic
+def test_elastic_scheduler_energy_monotonicity():
+    sch = ElasticScheduler(num_cores=8)
+    lo = sch.run([10] * 5, tick_seconds=0.01)
+    hi = sch.run([1000] * 5, tick_seconds=0.01)
+    assert hi.active_joules > lo.active_joules
+    assert lo.total_joules > 0
+
+
+def test_elastic_standby_savings():
+    """Idle cores under CG+RBB must cost ~4000x less than CG alone."""
+    from repro.core.elastic import PowerState
+    cg = ElasticScheduler(8, state=PowerState(use_rbb=False))
+    rbb = ElasticScheduler(8, state=PowerState(use_rbb=True))
+    r_cg = cg.run([0] * 10, 0.01)
+    r_rbb = rbb.run([0] * 10, 0.01)
+    assert r_cg.standby_joules / r_rbb.standby_joules > 1000
+
+
+def test_straggler_mitigation_improves_makespan():
+    costs = [1.0] * 64
+    speeds = [1.0] * 7 + [0.25]
+    assert lpt_schedule(costs, speeds)[0] < static_schedule(costs, speeds) * 0.5

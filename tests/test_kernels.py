@@ -1,0 +1,147 @@
+"""Per-kernel allclose sweeps: Pallas (interpret mode) vs pure-jnp oracle,
+across shapes and dtypes, plus hypothesis property tests on the bit-level
+invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+from repro.kernels.bit_transpose import bit_transpose
+from repro.kernels.bitmap_ops import bitmap_query
+from repro.kernels.cam_match import cam_match
+
+RNG = np.random.default_rng(42)
+
+
+# ------------------------------------------------------------- cam_match
+@pytest.mark.parametrize("n,w,m,bn,bm", [
+    (8, 32, 32, 4, 32),          # paper-like core geometry
+    (16, 8, 64, 8, 32),
+    (64, 32, 128, 16, 64),
+    (256, 16, 256, 64, 128),
+])
+def test_cam_match_kernel_shapes(n, w, m, bn, bm):
+    records = jnp.asarray(RNG.integers(0, 256, (n, w), dtype=np.int32))
+    keys = jnp.asarray(RNG.integers(0, 256, (m,), dtype=np.int32))
+    got = cam_match(records, keys, block_n=bn, block_m=bm)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.cam_match(records, keys)))
+
+
+@pytest.mark.parametrize("dtype", [np.int32, np.uint8, np.int16])
+def test_cam_match_dtypes(dtype):
+    records = jnp.asarray(RNG.integers(0, 120, (16, 8)).astype(dtype))
+    keys = jnp.asarray(RNG.integers(0, 120, (32,)).astype(dtype))
+    got = ops.cam_match(records, keys)
+    want = ref.cam_match(records.astype(jnp.int32), keys.astype(jnp.int32))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_cam_match_odd_shapes_padding():
+    records = jnp.asarray(RNG.integers(0, 256, (19, 7), dtype=np.int32))
+    keys = jnp.asarray(RNG.integers(0, 256, (37,), dtype=np.int32))
+    got = ops.cam_match(records, keys)
+    dense = np.asarray(ref.cam_match_unpacked(records, keys))
+    got_dense = np.asarray(ref.unpack_bits(got, 37))
+    np.testing.assert_array_equal(got_dense, dense)
+
+
+# --------------------------------------------------------- bit_transpose
+@pytest.mark.parametrize("r,cw,bc", [
+    (32, 1, 1), (64, 4, 2), (128, 8, 8), (256, 16, 4),
+])
+def test_bit_transpose_kernel(r, cw, bc):
+    x = jnp.asarray(RNG.integers(0, 2 ** 32, (r, cw), dtype=np.uint32))
+    got = bit_transpose(x, block_c=bc)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.bit_transpose(x)))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(0, 2 ** 32 - 1))
+def test_bit_transpose_involution(rw, cw, seed):
+    """Property: transpose(transpose(X)) == X for 32-aligned matrices."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2 ** 32, (32 * rw, cw), dtype=np.uint32))
+    tt = ops.transpose(ops.transpose(x))
+    np.testing.assert_array_equal(np.asarray(tt), np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_transpose_moves_bits(seed):
+    """Property: bit (r, c) lands at (c, r)."""
+    rng = np.random.default_rng(seed)
+    r, c = int(rng.integers(0, 64)), int(rng.integers(0, 64))
+    x = np.zeros((64, 2), np.uint32)
+    x[r, c // 32] = np.uint32(1) << (c % 32)
+    y = np.asarray(ops.transpose(jnp.asarray(x)))
+    assert (y[c, r // 32] >> np.uint32(r % 32)) & 1 == 1
+    assert y.sum() == y[c, r // 32]      # exactly one bit set
+
+
+# ----------------------------------------------------------- bitmap query
+@pytest.mark.parametrize("k,nw,bn", [(1, 8, 8), (3, 64, 32), (5, 256, 128)])
+def test_bitmap_query_kernel(k, nw, bn):
+    rows = jnp.asarray(RNG.integers(0, 2 ** 32, (k, nw), dtype=np.uint32))
+    inv = jnp.asarray(RNG.integers(0, 2, (k,), dtype=np.int32))
+    res, cnt = bitmap_query(rows, inv, block_n=bn)
+    wres, wcnt = ref.bitmap_query(rows, inv)
+    np.testing.assert_array_equal(np.asarray(res), np.asarray(wres))
+    assert int(cnt) == int(wcnt)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_query_matches_set_semantics(k, nw, seed):
+    """Property: the query result equals python-set evaluation."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 2 ** 32, (k, nw), dtype=np.uint32)
+    inv = rng.integers(0, 2, (k,), dtype=np.int32)
+    res, cnt = ops.query(jnp.asarray(rows), jnp.asarray(inv))
+    n = nw * 32
+    want = np.ones(n, bool)
+    dense = np.asarray(ref.unpack_bits(jnp.asarray(rows), n)).astype(bool)
+    for i in range(k):
+        want &= ~dense[i] if inv[i] else dense[i]
+    got = np.asarray(ref.unpack_bits(res[None], n))[0].astype(bool)
+    np.testing.assert_array_equal(got, want)
+    assert int(cnt) == int(want.sum())
+
+
+# ------------------------------------------------------------ end-to-end
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 12), st.integers(2, 50),
+       st.integers(0, 2 ** 31 - 1))
+def test_create_index_property(n, w, m, seed):
+    """Property: BI(i, j) == 1 iff record j contains key i (paper Fig. 1)."""
+    rng = np.random.default_rng(seed)
+    records = rng.integers(0, 64, (n, w), dtype=np.int32)
+    keys = rng.integers(0, 64, (m,), dtype=np.int32)
+    bi = ops.create_index(jnp.asarray(records), jnp.asarray(keys))
+    dense = np.asarray(ref.unpack_bits(bi, n))
+    for i in range(m):
+        for j in range(n):
+            assert dense[i, j] == int(keys[i] in records[j])
+
+
+# -------------------------------------------------- pallas flash attention
+@pytest.mark.parametrize("causal,s,bq,bk", [
+    (True, 256, 64, 64), (False, 300, 64, 96), (True, 128, 128, 32),
+])
+def test_pallas_flash_fwd_vs_naive(causal, s, bq, bk):
+    from repro.kernels.attention import flash_attention_fwd
+    rng = np.random.default_rng(1)
+    BH, hd = 3, 32
+    q = jnp.asarray(rng.standard_normal((BH, s, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((BH, s, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((BH, s, hd)), jnp.float32)
+    out = flash_attention_fwd(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    scores = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(hd)
+    if causal:
+        mask = jnp.arange(s)[None, :] <= jnp.arange(s)[:, None]
+        scores = jnp.where(mask[None], scores, -1e30)
+    want = jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(scores, -1), v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), atol=2e-5)

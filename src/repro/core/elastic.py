@@ -1,11 +1,11 @@
-"""Multi-core BIC (paper Fig. 4) + the standby-power *policy* on TPU.
+"""Elastic multi-core *policy*: energy accounting and straggler scheduling.
 
 The paper deploys Z BIC cores, feeds each a batch from external memory, and
 puts idle cores in standby (CG + RBB).  The TPU translation:
 
-  * "Z cores"            -> Z devices along the ``data`` mesh axis;
-                            ``multicore_create_index`` shard_maps one BIC
-                            pipeline per device over a batch axis.
+  * "Z cores"            -> Z devices along the ``data`` mesh axis; the
+                            engine runtime (``repro.engine.runtime``)
+                            shard_maps one BIC pipeline per device.
   * "standby idle cores" -> the elastic scheduler activates only
                             ceil(workload / batches_per_core) cores per tick
                             and accounts the rest at standby power using the
@@ -15,6 +15,10 @@ puts idle cores in standby (CG + RBB).  The TPU translation:
                             earliest-finishing core instead of statically
                             striped, bounding makespan at max(LPT) instead
                             of max(static stripe x slowest core).
+
+Actual sharded execution lives in :mod:`repro.engine.runtime`
+(``MulticoreRuntime`` fuses it with this module's energy accounting);
+``multicore_create_index`` below is a thin compatibility wrapper.
 """
 from __future__ import annotations
 
@@ -22,49 +26,25 @@ import dataclasses
 import math
 from typing import Sequence
 
+from repro import compat  # noqa: F401  (mesh API shims for jax 0.4.x)
+
 import jax
-import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.bic import BICConfig, PaperConfig
 from repro.core import power
-from repro.kernels import ref, ops
 
 
 # ------------------------------------------------------------- multi-core op
 def multicore_create_index(records: jax.Array, keys: jax.Array,
-                           mesh: Mesh, axis: str = "data",
-                           *, use_kernels: bool | None = None) -> jax.Array:
-    """records (Z*B, N, W) sharded over ``axis``; keys replicated.
+                           mesh, axis: str = "data",
+                           *, backend: str = "auto") -> jax.Array:
+    """Compatibility wrapper over the engine runtime's sharded build.
 
-    Each device runs the full BIC pipeline on its local batches — the
-    paper's Fig. 4 dataflow (no cross-core communication during indexing;
-    results are resharded only on readout).  Returns (Z*B, M, ceil(N/32)).
+    records (Z*B, N, W) sharded over ``axis``; keys replicated.  Returns
+    (Z*B, M, ceil(N/32)).  See ``repro.engine.runtime``.
     """
-    zb, n, w = records.shape
-    m = keys.shape[0]
-    nw = math.ceil(n / 32)
-    if use_kernels is None:
-        use_kernels = jax.default_backend() == "tpu"
-
-    def per_core(rec_block, keys_rep):
-        def one(rec):
-            if use_kernels:
-                return ops.create_index(rec, keys_rep)
-            npad = -n % 32
-            mpad = -m % 32
-            rp = jnp.pad(rec.astype(jnp.int32), ((0, npad), (0, 0)),
-                         constant_values=-1)
-            kp = jnp.pad(keys_rep.astype(jnp.int32), (0, mpad),
-                         constant_values=-2)
-            return ref.create_index(rp, kp)[:m, :nw]
-        return jax.vmap(one)(rec_block)
-
-    fn = jax.shard_map(
-        per_core, mesh=mesh,
-        in_specs=(P(axis, None, None), P()),
-        out_specs=P(axis, None, None))
-    return fn(records, keys)
+    from repro.engine.runtime import multicore_create_index as _impl
+    return _impl(records, keys, mesh, axis, backend=backend)
 
 
 # -------------------------------------------------------- elastic energy sim
@@ -88,6 +68,13 @@ class EnergyReport:
     @property
     def total_joules(self) -> float:
         return self.active_joules + self.standby_joules
+
+    def merge(self, other: "EnergyReport") -> "EnergyReport":
+        """Accumulate another report into this one, field by field."""
+        for f in dataclasses.fields(self):
+            setattr(self, f.name,
+                    getattr(self, f.name) + getattr(other, f.name))
+        return self
 
 
 def cycles_per_batch(cfg: BICConfig = PaperConfig) -> int:
@@ -146,7 +133,6 @@ def lpt_schedule(batch_costs: Sequence[float], speeds: Sequence[float]
     host) runs slow: batches go to the earliest-available core.
     """
     finish = [0.0] * len(speeds)
-    assignment = []
     order = sorted(range(len(batch_costs)), key=lambda i: -batch_costs[i])
     assign_of = [0] * len(batch_costs)
     for i in order:

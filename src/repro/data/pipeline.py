@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bic import BICCore, BICConfig, BitmapIndex
+from repro.engine.planner import Pred
 
 ATTR_WORDS = 8        # attribute words per document "record"
 
@@ -85,19 +86,27 @@ class BitmapIndexedDataset:
             self._shards[shard_id] = (tokens, index)
         return self._shards[shard_id]
 
-    def select(self, shard_id: int, include: Sequence[int],
-               exclude: Sequence[int] = ()) -> np.ndarray:
-        """Document ids in ``shard_id`` matching the attribute query."""
+    def select(self, shard_id: int, include: Sequence[int] = (),
+               exclude: Sequence[int] = (), *,
+               where: Pred | None = None) -> np.ndarray:
+        """Document ids in ``shard_id`` matching the attribute query.
+
+        ``include``/``exclude`` express AND-of-literals; ``where`` accepts an
+        arbitrary predicate tree, e.g.
+        ``where=(key(0) | key(1)) & key(18) & ~key(30)`` for
+        "(domain 0 or domain 1) and quality bucket 2 and not tag 30" — the
+        engine planner fuses it into minimal bitmap passes."""
         tokens, index = self._ensure_shard(shard_id)
-        row, _ = self.bic.query(index, include=include, exclude=exclude)
+        row, _ = self.bic.query(index, include=include, exclude=exclude,
+                                where=where)
         bits = np.asarray(jax.device_get(row))
         ids = np.flatnonzero(
             np.unpackbits(bits.view(np.uint8), bitorder="little"))
         return ids[ids < tokens.shape[0]]
 
-    def batches(self, batch_size: int, include: Sequence[int],
-                exclude: Sequence[int] = (), *, seed: int = 0,
-                start_step: int = 0) -> Iterator[dict]:
+    def batches(self, batch_size: int, include: Sequence[int] = (),
+                exclude: Sequence[int] = (), *, where: Pred | None = None,
+                seed: int = 0, start_step: int = 0) -> Iterator[dict]:
         """Infinite deterministic batch stream over the selected subset.
 
         ``start_step`` resumes mid-stream after a restart (the training
@@ -105,7 +114,7 @@ class BitmapIndexedDataset:
         rng = np.random.default_rng(seed)
         pools = []
         for s in range(self.cfg.num_shards):
-            ids = self.select(s, include, exclude)
+            ids = self.select(s, include, exclude, where=where)
             tokens, _ = self._ensure_shard(s)
             if len(ids):
                 pools.append(tokens[ids])

@@ -1,0 +1,55 @@
+"""``repro.engine`` — the single execution layer for bitmap indexing.
+
+Three tiers (see ARCHITECTURE.md):
+
+  * :mod:`repro.engine.policy`   — canonical padding/sentinel policy and the
+    packed :class:`BitmapIndex` container.
+  * :mod:`repro.engine.backends` — backend registry (``pallas`` / ``ref`` /
+    ``auto``) behind one ``create_index`` / ``query`` interface.
+  * :mod:`repro.engine.planner`  — boolean query planner: AND/OR/NOT
+    predicate trees normalized to DNF and compiled to a minimal sequence of
+    fused bitmap-kernel passes, with jit caching keyed on plan shape.
+  * :mod:`repro.engine.runtime`  — streaming multi-core runtime: incremental
+    index append and shard_map dispatch fused with elastic energy accounting.
+
+Symbols are resolved lazily so that lower layers (``repro.kernels.ops``
+imports the policy; ``repro.core`` imports backends/planner; the runtime
+imports ``repro.core.elastic``) never form an import cycle through this
+package ``__init__``.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # policy
+    "PACK": "policy", "RECORD_SENTINEL": "policy", "KEY_SENTINEL": "policy",
+    "BitmapIndex": "policy", "mask_tail": "policy",
+    # backends
+    "Backend": "backends", "register_backend": "backends",
+    "get_backend": "backends", "resolve_backend": "backends",
+    "available_backends": "backends",
+    # planner
+    "Pred": "planner", "Key": "planner", "And": "planner", "Or": "planner",
+    "Not": "planner", "key": "planner", "plan": "planner",
+    "QueryPlan": "planner", "execute": "planner",
+    "from_include_exclude": "planner",
+    # runtime
+    "StreamingIndexer": "runtime", "MulticoreRuntime": "runtime",
+    "multicore_create_index": "runtime",
+}
+
+__all__ = sorted(_EXPORTS) + ["policy", "backends", "planner", "runtime"]
+
+
+def __getattr__(name):
+    if name in ("policy", "backends", "planner", "runtime"):
+        return importlib.import_module(f"{__name__}.{name}")
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,92 @@
+"""Backend registry — every index build and query pass dispatches here.
+
+A :class:`Backend` pairs the two primitive operations the engine needs:
+
+  * ``create_index(records (N, W) int, keys (M,) int)``
+      -> key-major packed bitmap (M, ceil(N/32)) uint32, with all pad bits
+      past N guaranteed zero (the canonical sentinel policy ensures padded
+      records match nothing);
+  * ``query(rows (K, Nw) uint32, invert (K,) int)``
+      -> (result row (Nw,) uint32, popcount) for AND_k (invert_k ? ~r : r).
+      Tail bits past the logical record count are NOT masked here — the
+      planner applies :func:`repro.engine.policy.mask_tail` exactly once per
+      compiled plan.
+
+Built-ins: ``pallas`` (the TPU kernels; interpret mode off-TPU) and ``ref``
+(the pure-jnp oracle).  ``auto`` resolves to ``pallas`` on TPU and ``ref``
+elsewhere — vmapping interpreted Pallas kernels on CPU is strictly slower
+than the oracle.  New backends (e.g. a future GPU or bit-sliced CPU path)
+register with :func:`register_backend`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+from typing import Protocol
+
+import jax
+
+from repro.engine import policy
+from repro.kernels import ops, ref
+
+
+class _CreateFn(Protocol):
+    def __call__(self, records: jax.Array, keys: jax.Array) -> jax.Array: ...
+
+
+class _QueryFn(Protocol):
+    def __call__(self, rows: jax.Array, invert: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]: ...
+
+
+@dataclasses.dataclass(frozen=True)
+class Backend:
+    name: str
+    create_index: _CreateFn
+    query: _QueryFn
+
+
+_REGISTRY: dict[str, Backend] = {}
+
+
+def register_backend(backend: Backend) -> Backend:
+    _REGISTRY[backend.name] = backend
+    # Compiled query executors close over the Backend object; drop them so a
+    # re-registered name can't keep dispatching to the stale backend.
+    planner = sys.modules.get("repro.engine.planner")
+    if planner is not None:
+        planner._compiled.cache_clear()
+    return backend
+
+
+def available_backends() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY)) + ("auto",)
+
+
+def resolve_backend(name: str) -> str:
+    """Map ``auto`` to a concrete backend for the current jax platform."""
+    if name == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"registered: {available_backends()}")
+    return name
+
+
+def get_backend(name: str = "auto") -> Backend:
+    return _REGISTRY[resolve_backend(name)]
+
+
+# ------------------------------------------------------------ built-ins
+def _ref_create_index(records: jax.Array, keys: jax.Array) -> jax.Array:
+    """Oracle path: pad to PACK multiples with the canonical sentinels, run
+    the pure-jnp pipeline, slice back to logical shape."""
+    n = records.shape[0]
+    m = keys.shape[0]
+    packed = ref.create_index(policy.pad_records(records),
+                              policy.pad_keys(keys))
+    return packed[:m, : policy.num_words(n)]
+
+
+register_backend(Backend("ref", _ref_create_index, ref.bitmap_query))
+register_backend(Backend("pallas", ops.create_index, ops.query))

@@ -1,0 +1,232 @@
+"""Boolean query planner: predicate trees -> fused bitmap-kernel passes.
+
+The bitmap kernels execute one shape of work natively: a fused
+AND-with-per-row-inversion over packed index rows (``Backend.query``).  The
+planner maps arbitrary AND/OR/NOT predicate trees onto a *minimal sequence*
+of those passes:
+
+  1. normalize to negation normal form (De Morgan pushes NOT to leaves);
+  2. distribute to disjunctive normal form — each conjunctive clause is
+     exactly one fused kernel pass;
+  3. simplify: drop contradictory clauses (``x & ~x``), dedup literals,
+     absorb clauses subsumed by a subset clause (``a | (a & b)`` -> ``a``);
+  4. OR the per-clause result rows, then apply the canonical tail mask and
+     popcount once.
+
+Compiled executors are jit-cached keyed on *plan shape* (backend, literals
+per clause) — two plans with the same shape but different key ids or record
+counts share one trace, because the gather indices, inversion flags, and
+record count enter as traced arrays.
+
+Predicates compose with Python operators::
+
+    from repro.engine import key
+    pred = (key(2) | key(7)) & key(4) & ~key(5)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Iterable, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.engine import backends, policy
+
+# ---------------------------------------------------------- predicate algebra
+class Pred:
+    """Base predicate; combine with ``&``, ``|``, ``~``."""
+
+    def __and__(self, other: "Pred") -> "Pred":
+        return And((self, other))
+
+    def __or__(self, other: "Pred") -> "Pred":
+        return Or((self, other))
+
+    def __invert__(self) -> "Pred":
+        return Not(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class Key(Pred):
+    """Leaf: "the record contains index key ``index``"."""
+    index: int
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Pred):
+    children: tuple[Pred, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Pred):
+    children: tuple[Pred, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Pred):
+    child: Pred
+
+
+def key(index: int) -> Key:
+    return Key(int(index))
+
+
+def from_include_exclude(include: Sequence[int] = (),
+                         exclude: Sequence[int] = ()) -> Pred:
+    """The legacy API surface: AND of positive/negated literals."""
+    lits: list[Pred] = [key(i) for i in include]
+    lits += [~key(i) for i in exclude]
+    if not lits:
+        raise ValueError("query needs at least one operand row")
+    return lits[0] if len(lits) == 1 else And(tuple(lits))
+
+
+# ------------------------------------------------------------- normalization
+Literal = tuple[int, bool]           # (key index, inverted)
+Clause = frozenset  # of Literal
+
+
+def _dnf(p: Pred, neg: bool) -> frozenset:
+    """Disjunctive normal form as a set of conjunctive clauses."""
+    if isinstance(p, Key):
+        return frozenset({Clause({(p.index, neg)})})
+    if isinstance(p, Not):
+        return _dnf(p.child, not neg)
+    if isinstance(p, (And, Or)):
+        if not p.children:
+            raise ValueError(f"{type(p).__name__} needs at least one child")
+        parts = [_dnf(c, neg) for c in p.children]
+        conjunctive = isinstance(p, And) != neg       # De Morgan under neg
+        if not conjunctive:
+            return frozenset().union(*parts)
+        out = {Clause()}
+        for part in parts:
+            out = {a | b for a in out for b in part}
+        return frozenset(out)
+    raise TypeError(f"not a predicate: {p!r}")
+
+
+def _simplify(clauses: Iterable[Clause]) -> list[tuple[Literal, ...]]:
+    sat = [c for c in clauses
+           if not any((i, not inv) in c for i, inv in c)]
+    # absorption: a clause subsumed by a subset clause contributes nothing
+    kept = [c for c in sat
+            if not any(o < c for o in sat)]
+    # deterministic ordering for stable plan shapes / cache keys
+    return sorted(tuple(sorted(c)) for c in set(kept))
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Normalized, simplified DNF: one fused kernel pass per clause."""
+    clauses: tuple[tuple[Literal, ...], ...]
+
+    @property
+    def shape(self) -> tuple[int, ...]:
+        """Literals per pass — the jit-cache key component."""
+        return tuple(len(c) for c in self.clauses)
+
+    @property
+    def num_passes(self) -> int:
+        return len(self.clauses)
+
+
+def plan(pred: Pred) -> QueryPlan:
+    """Normalize + simplify a predicate tree into an executable plan."""
+    return QueryPlan(tuple(_simplify(_dnf(pred, neg=False))))
+
+
+def key_indices(pred: Pred) -> set[int]:
+    """Every key index mentioned anywhere in a predicate tree (including
+    branches that normalization would simplify away)."""
+    if isinstance(pred, Key):
+        return {pred.index}
+    if isinstance(pred, Not):
+        return key_indices(pred.child)
+    if isinstance(pred, (And, Or)):
+        out: set[int] = set()
+        for c in pred.children:
+            out |= key_indices(c)
+        return out
+    raise TypeError(f"not a predicate: {pred!r}")
+
+
+# ----------------------------------------------------------------- execution
+@functools.lru_cache(maxsize=256)
+def _compiled(backend_name: str, shape: tuple[int, ...]):
+    """One jitted executor per (backend, plan shape).  The record count
+    enters traced, so record-count changes alone never retrace; jit still
+    retraces when the packed *word* count (ceil(N/32)) grows, e.g. a
+    streaming append that crosses a 32-record boundary."""
+    backend = backends.get_backend(backend_name)
+
+    def run(packed, num_records, sels, invs):
+        nw = packed.shape[1]
+        acc = jnp.zeros((nw,), jnp.uint32)
+        for sel, inv in zip(sels, invs):
+            row, _ = backend.query(packed[sel], inv)
+            acc = acc | row
+        return policy.mask_tail(acc, num_records)
+
+    return jax.jit(run)
+
+
+def compiled_plan_cache_info():
+    """Exposed for tests/benchmarks: the executor cache statistics."""
+    return _compiled.cache_info()
+
+
+def execute(packed: jax.Array, predicate: Union[Pred, QueryPlan], *,
+            num_records: int, backend: str = "auto"
+            ) -> tuple[jax.Array, jax.Array]:
+    """Run a predicate (or pre-built plan) over a packed (M, Nw) index.
+
+    Returns (packed result row (Nw,) uint32, matching-record count), with
+    tail bits past ``num_records`` masked to zero.
+    """
+    if isinstance(predicate, QueryPlan):
+        pl = predicate
+        mentioned = {i for c in pl.clauses for i, _ in c}
+    else:
+        # validate on the raw tree, BEFORE simplification, so a typo'd id
+        # inside a contradictory/absorbed branch still raises
+        mentioned = key_indices(predicate)
+        pl = plan(predicate)
+    name = backends.resolve_backend(backend)
+    num_keys = packed.shape[0]
+    bad = sorted(i for i in mentioned if not 0 <= i < num_keys)
+    if bad:                  # a silent jnp gather clamp would mis-select
+        raise ValueError(f"key indices {bad} out of range for an index "
+                         f"with {num_keys} keys")
+    nw = packed.shape[1]
+    if not pl.clauses:       # contradiction: provably empty, no kernel pass
+        return (jnp.zeros((nw,), jnp.uint32), jnp.zeros((), jnp.int32))
+    sels = tuple(jnp.asarray([i for i, _ in c], jnp.int32)
+                 for c in pl.clauses)
+    invs = tuple(jnp.asarray([int(inv) for _, inv in c], jnp.int32)
+                 for c in pl.clauses)
+    return _compiled(name, pl.shape)(packed, jnp.int32(num_records),
+                                     sels, invs)
+
+
+def evaluate_dense(pred: Pred, dense: "jnp.ndarray") -> "jnp.ndarray":
+    """Reference semantics on a dense (M, N) {0,1} matrix — test oracle."""
+    import numpy as np
+    d = np.asarray(dense).astype(bool)
+
+    def ev(p) -> np.ndarray:
+        if isinstance(p, Key):
+            return d[p.index]
+        if isinstance(p, Not):
+            return ~ev(p.child)
+        if isinstance(p, And):
+            return functools.reduce(lambda a, b: a & b,
+                                    (ev(c) for c in p.children))
+        if isinstance(p, Or):
+            return functools.reduce(lambda a, b: a | b,
+                                    (ev(c) for c in p.children))
+        raise TypeError(f"not a predicate: {p!r}")
+
+    return ev(pred)

@@ -1,0 +1,68 @@
+"""Canonical padding / sentinel policy for every bitmap-index execution path.
+
+This is the engine's single policy surface, replacing the rules that used
+to be duplicated across ``core/bic.py``, ``kernels/ops.py`` and
+``core/elastic.py``:
+
+  * records pad with :data:`RECORD_SENTINEL` (-1) — a padded record matches
+    no key, so its index column is all-zero;
+  * keys pad with :data:`KEY_SENTINEL` (-2) — a padded key matches no record
+    (and, crucially, differs from the record sentinel so sentinel-vs-sentinel
+    never matches);
+  * packed query results carry garbage bits past ``num_records`` whenever an
+    operand row enters inverted; :func:`mask_tail` zeroes them and recounts.
+
+The bit-packing/sentinel primitives themselves live with the packing
+conventions in :mod:`repro.kernels.ref` (so kernel wrappers never import
+upward from the engine); this module re-exports them and adds the
+engine-level pieces: :func:`mask_tail` and :class:`BitmapIndex`, the packed
+key-major index container all layers exchange.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.ref import (KEY_SENTINEL, PACK,  # noqa: F401  (re-export)
+                               RECORD_SENTINEL, num_words, pad_keys,
+                               pad_records, round_up)
+
+
+def mask_tail(result: jax.Array, num_records: int | jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """Zero bits >= num_records (they exist only due to 32-bit packing) and
+    return (masked row, popcount).  ``num_records`` may be traced."""
+    nw = result.shape[0]
+    valid = (jnp.arange(nw * PACK, dtype=jnp.uint32) < num_records)
+    masked = result & ref.pack_bits(valid)
+    count = jax.lax.population_count(masked).astype(jnp.int32).sum()
+    return masked, count
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BitmapIndex:
+    """Key-major packed bitmap index: rows = keys, columns = records."""
+    packed: jax.Array          # (M, ceil(N/32)) uint32
+    num_records: int
+
+    def tree_flatten(self):
+        return (self.packed,), self.num_records
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(children[0], aux)
+
+    @property
+    def num_keys(self) -> int:
+        return self.packed.shape[0]
+
+    def row(self, key_idx: int) -> jax.Array:
+        return self.packed[key_idx]
+
+    def to_dense(self) -> jax.Array:
+        """(M, N) {0,1} — for tests and small examples only."""
+        return ref.unpack_bits(self.packed, self.num_records)

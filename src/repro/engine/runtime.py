@@ -1,0 +1,186 @@
+"""Streaming multi-core runtime: sharded index builds fused with the elastic
+energy model, and incremental append into existing packed indexes.
+
+The paper's Fig. 4 deployment feeds Z independent BIC cores from external
+memory and powers idle cores down.  The seed simulated the energy side
+(``ElasticScheduler``) separately from the execution side
+(``multicore_create_index``); this module fuses them:
+
+  * :func:`multicore_create_index` — shard_map dispatch of the full BIC
+    pipeline, one engine backend per device, no cross-core communication
+    during indexing (moved here from ``core/elastic.py``; that module keeps
+    a thin compatibility wrapper).
+  * :class:`StreamingIndexer` — incremental append of record blocks into an
+    existing packed index with NO full rebuild: each block is indexed alone
+    and bit-spliced onto the packed tail (a shift/carry merge when the
+    current record count is not 32-aligned).
+  * :class:`MulticoreRuntime` — drives ticks of a workload stream through
+    the sharded build AND integrates active/standby energy with the
+    calibrated silicon model.  The energy side is the paper-clock model
+    driven by per-tick workload counts (cores_needed), not a measurement of
+    the device execution — shard_map always dispatches over every mesh
+    device; calibrating joules against measured wall-clock is a ROADMAP
+    follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable
+
+from repro import compat  # noqa: F401  (jax.shard_map / mesh shims on 0.4.x)
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.engine import backends, policy
+from repro.core.bic import BICConfig, PaperConfig
+from repro.core.elastic import ElasticScheduler, EnergyReport, PowerState
+
+
+# ------------------------------------------------------------- sharded build
+def multicore_create_index(records: jax.Array, keys: jax.Array,
+                           mesh: Mesh, axis: str = "data",
+                           *, backend: str = "auto") -> jax.Array:
+    """records (Z*B, N, W) sharded over ``axis``; keys replicated.
+
+    Each device runs the full BIC pipeline on its local batches — the
+    paper's Fig. 4 dataflow (no cross-core communication during indexing;
+    results are resharded only on readout).  Batch counts that do not
+    divide the mesh axis are zero-padded for dispatch and sliced off the
+    result.  Returns (Z*B, M, ceil(N/32)).
+    """
+    be = backends.get_backend(backend)
+    zb = records.shape[0]
+    z = dict(mesh.shape)[axis]
+    pad = -zb % z
+    if pad:
+        records = jnp.pad(records, ((0, pad), (0, 0), (0, 0)))
+
+    def per_core(rec_block, keys_rep):
+        return jax.vmap(lambda rec: be.create_index(rec, keys_rep))(rec_block)
+
+    fn = jax.shard_map(
+        per_core, mesh=mesh,
+        in_specs=(P(axis, None, None), P()),
+        out_specs=P(axis, None, None),
+        check_vma=False)   # pallas_call has no replication rule on jax 0.4.x
+    out = fn(records, keys)
+    return out[:zb] if pad else out
+
+
+# -------------------------------------------------------- incremental append
+def append_packed(packed: jax.Array, num_records: int,
+                  block: jax.Array, block_records: int) -> jax.Array:
+    """Bit-splice a freshly indexed ``block`` (M, ceil(n'/32)) onto a packed
+    index (M, ceil(n/32)) holding ``num_records`` records.
+
+    Pad bits past each logical record count must be zero (every engine
+    backend guarantees this).  O(words) shift/carry merge — no unpack.
+    """
+    m, _ = packed.shape
+    off = num_records % policy.PACK
+    total_words = policy.num_words(num_records + block_records)
+    if off == 0:
+        return jnp.concatenate([packed, block], axis=1)[:, :total_words]
+    full = num_records // policy.PACK
+    base, tail = packed[:, :full], packed[:, full]
+    hi = block << jnp.uint32(off)
+    carry = block >> jnp.uint32(policy.PACK - off)
+    ext = jnp.concatenate([hi, jnp.zeros((m, 1), jnp.uint32)], axis=1)
+    ext = ext.at[:, 1:].set(ext[:, 1:] | carry)
+    ext = ext.at[:, 0].set(ext[:, 0] | tail)
+    return jnp.concatenate([base, ext], axis=1)[:, :total_words]
+
+
+class StreamingIndexer:
+    """Grow one key-major index record-block by record-block.
+
+    ``append`` indexes only the incoming block and splices it in; the live
+    index is always available via ``.index`` (bit-identical to a
+    from-scratch rebuild over all records seen so far).
+    """
+
+    def __init__(self, keys: jax.Array, *, backend: str = "auto"):
+        self.keys = jnp.asarray(keys, jnp.int32)
+        self.backend = backends.resolve_backend(backend)
+        self._packed = jnp.zeros((self.keys.shape[0], 0), jnp.uint32)
+        self._num_records = 0
+
+    @property
+    def num_records(self) -> int:
+        return self._num_records
+
+    def append(self, records: jax.Array) -> policy.BitmapIndex:
+        """Index a (N', W) record block and splice it in; returns the
+        updated live index."""
+        n_new = records.shape[0]
+        block = backends.get_backend(self.backend).create_index(
+            records, self.keys)
+        self._packed = append_packed(self._packed, self._num_records,
+                                     block, n_new)
+        self._num_records += n_new
+        return self.index
+
+    @property
+    def index(self) -> policy.BitmapIndex:
+        return policy.BitmapIndex(self._packed, self._num_records)
+
+
+# ------------------------------------------------- fused execution + energy
+@dataclasses.dataclass
+class TickResult:
+    indexes: jax.Array | None   # (B_t, M, ceil(N/32)); None on an idle tick
+    active_cores: int
+    report: EnergyReport
+
+
+class MulticoreRuntime:
+    """Sharded indexing with elastic energy accounting in one place.
+
+    Each call to :meth:`run_tick` dispatches one tick's record batches over
+    the mesh (reusing :func:`multicore_create_index`) and charges the
+    elastic scheduler's calibrated power model for the cores the *policy*
+    would activate (``cores_needed``); idle cores accrue standby energy
+    (CG / CG+RBB).  Joules follow the paper-clock model, not the actual
+    device dispatch (which always spans the mesh).
+    """
+
+    def __init__(self, mesh: Mesh, axis: str = "data",
+                 cfg: BICConfig = PaperConfig,
+                 state: PowerState = PowerState(), *,
+                 backend: str = "auto"):
+        self.mesh = mesh
+        self.axis = axis
+        self.backend = backends.resolve_backend(backend)
+        num_cores = dict(mesh.shape)[axis]
+        self.scheduler = ElasticScheduler(num_cores, cfg, state)
+        self.report = EnergyReport()
+
+    def run_tick(self, records: jax.Array | None, keys: jax.Array,
+                 tick_seconds: float) -> TickResult:
+        """records (B_t, N, W) for this tick (None = idle tick)."""
+        wl = 0 if records is None else records.shape[0]
+        tick = self.scheduler.run([wl], tick_seconds)
+        self.report.merge(tick)
+        if wl == 0:
+            return TickResult(None, 0, tick)
+        out = multicore_create_index(records, keys, self.mesh, self.axis,
+                                     backend=self.backend)
+        z = self.scheduler.cores_needed(wl, tick_seconds)
+        return TickResult(out, z, tick)
+
+    def index_stream(self, ticks: Iterable[jax.Array | None],
+                     keys: jax.Array, tick_seconds: float
+                     ) -> tuple[list[jax.Array], EnergyReport]:
+        """Run a whole workload stream; returns per-tick index arrays and
+        the energy report for THIS stream (the runtime-lifetime total stays
+        available as ``self.report``)."""
+        outputs = []
+        stream_report = EnergyReport()
+        for records in ticks:
+            res = self.run_tick(records, keys, tick_seconds)
+            stream_report.merge(res.report)
+            if res.indexes is not None:
+                outputs.append(res.indexes)
+        return outputs, stream_report

@@ -16,16 +16,14 @@ from repro.kernels import bit_transpose as _bt
 from repro.kernels import bitmap_ops as _bq
 from repro.kernels import cam_match as _cm
 from repro.kernels import ref
-
-PACK = 32
+# The canonical padding/sentinel policy lives with the packing conventions
+# in ref.py; these wrappers only add kernel-specific block alignment.
+from repro.kernels.ref import PACK, pad_keys, pad_records
+from repro.kernels.ref import round_up as _round_up
 
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def _pick_block(total: int, preferred: int, multiple: int) -> int:
@@ -53,9 +51,8 @@ def cam_match(records: jax.Array, keys: jax.Array, *,
     block_m = _pick_block(Mp, 1024, PACK)
     block_n = _pick_block(_round_up(N, 8), 256, 8)
     Np = _round_up(N, block_n)
-    rec = jnp.pad(records.astype(jnp.int32), ((0, Np - N), (0, 0)),
-                  constant_values=-1)
-    ks = jnp.pad(keys.astype(jnp.int32), (0, Mp - M), constant_values=-2)
+    rec = pad_records(records, Np)
+    ks = pad_keys(keys, Mp)
     out = _cm.cam_match(rec, ks, block_n=block_n, block_m=block_m,
                         interpret=interpret)
     return out[:N]

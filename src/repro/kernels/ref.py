@@ -17,6 +17,42 @@ import jax.numpy as jnp
 PACK = 32
 _U32 = jnp.uint32
 
+# Canonical padding/sentinel policy (single source of truth; the engine
+# layer re-exports these via repro.engine.policy):
+#   * records pad with RECORD_SENTINEL — a padded record matches no key;
+#   * keys pad with KEY_SENTINEL — a padded key matches no record, and the
+#     two sentinels differ so sentinel never matches sentinel.
+# Application data must not use the sentinel values as real key material.
+RECORD_SENTINEL = -1
+KEY_SENTINEL = -2
+
+
+def round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def num_words(n: int) -> int:
+    """Packed uint32 words needed for ``n`` bits."""
+    return -(-n // PACK)
+
+
+def pad_records(records: jax.Array, n_to: int | None = None) -> jax.Array:
+    """Pad (N, W) records to ``n_to`` rows (default: next PACK multiple)
+    with the record sentinel, as int32."""
+    n = records.shape[0]
+    n_to = round_up(n, PACK) if n_to is None else n_to
+    return jnp.pad(records.astype(jnp.int32), ((0, n_to - n), (0, 0)),
+                   constant_values=RECORD_SENTINEL)
+
+
+def pad_keys(keys: jax.Array, m_to: int | None = None) -> jax.Array:
+    """Pad (M,) keys to ``m_to`` entries (default: next PACK multiple) with
+    the key sentinel, as int32."""
+    m = keys.shape[0]
+    m_to = round_up(m, PACK) if m_to is None else m_to
+    return jnp.pad(keys.astype(jnp.int32), (0, m_to - m),
+                   constant_values=KEY_SENTINEL)
+
 
 def pack_bits(bits: jax.Array) -> jax.Array:
     """Pack a (..., L) bool/int array into (..., L/32) uint32, LSB-first.

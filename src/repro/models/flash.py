@@ -315,8 +315,14 @@ def _flash_bwd_dense(qc, kc, causal, res, dout):
         else:
             dq_s, dk_s, dv_s = jax.lax.map(q_step, jnp.arange(nq))
             dq_all = jnp.moveaxis(dq_s, 0, 1)          # (B,nq,qc,KV,g,hd)
-            dk_j = dk_s.sum(axis=0)
-            dv_j = dv_s.sum(axis=0)
+            # Left-to-right accumulation over i, matching the sequential
+            # per-pair adds of the block-skip path bit-for-bit (a vectorized
+            # sum() may tree-reduce and round differently); fori_loop keeps
+            # the trace O(1) in nq.
+            dk_j, dv_j = jax.lax.fori_loop(
+                1, nq,
+                lambda i, kv: (kv[0] + dk_s[i], kv[1] + dv_s[i]),
+                (dk_s[0], dv_s[0]))
         return dq_acc + dq_all, (dk_j, dv_j)
 
     dq0 = jnp.zeros((B, nq, qc, KV, g, hd), f32)

@@ -1,0 +1,69 @@
+"""Hypothesis property tests on the bit-level kernel invariants.
+
+Kept separate from tests/test_kernels.py so the differential (pallas vs
+oracle) sweeps stay runnable when hypothesis is not installed — this whole
+module skips instead."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.kernels import ops, ref  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 3), st.integers(0, 2 ** 32 - 1))
+def test_bit_transpose_involution(rw, cw, seed):
+    """Property: transpose(transpose(X)) == X for 32-aligned matrices."""
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.integers(0, 2 ** 32, (32 * rw, cw), dtype=np.uint32))
+    tt = ops.transpose(ops.transpose(x))
+    np.testing.assert_array_equal(np.asarray(tt), np.asarray(x))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_transpose_moves_bits(seed):
+    """Property: bit (r, c) lands at (c, r)."""
+    rng = np.random.default_rng(seed)
+    r, c = int(rng.integers(0, 64)), int(rng.integers(0, 64))
+    x = np.zeros((64, 2), np.uint32)
+    x[r, c // 32] = np.uint32(1) << (c % 32)
+    y = np.asarray(ops.transpose(jnp.asarray(x)))
+    assert (y[c, r // 32] >> np.uint32(r % 32)) & 1 == 1
+    assert y.sum() == y[c, r // 32]      # exactly one bit set
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4), st.integers(1, 5), st.integers(0, 2 ** 31 - 1))
+def test_query_matches_set_semantics(k, nw, seed):
+    """Property: the query result equals python-set evaluation."""
+    rng = np.random.default_rng(seed)
+    rows = rng.integers(0, 2 ** 32, (k, nw), dtype=np.uint32)
+    inv = rng.integers(0, 2, (k,), dtype=np.int32)
+    res, cnt = ops.query(jnp.asarray(rows), jnp.asarray(inv))
+    n = nw * 32
+    want = np.ones(n, bool)
+    dense = np.asarray(ref.unpack_bits(jnp.asarray(rows), n)).astype(bool)
+    for i in range(k):
+        want &= ~dense[i] if inv[i] else dense[i]
+    got = np.asarray(ref.unpack_bits(res[None], n))[0].astype(bool)
+    np.testing.assert_array_equal(got, want)
+    assert int(cnt) == int(want.sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 40), st.integers(1, 12), st.integers(2, 50),
+       st.integers(0, 2 ** 31 - 1))
+def test_create_index_property(n, w, m, seed):
+    """Property: BI(i, j) == 1 iff record j contains key i (paper Fig. 1)."""
+    rng = np.random.default_rng(seed)
+    records = rng.integers(0, 64, (n, w), dtype=np.int32)
+    keys = rng.integers(0, 64, (m,), dtype=np.int32)
+    bi = ops.create_index(jnp.asarray(records), jnp.asarray(keys))
+    dense = np.asarray(ref.unpack_bits(bi, n))
+    for i in range(m):
+        for j in range(n):
+            assert dense[i, j] == int(keys[i] in records[j])

@@ -1,0 +1,38 @@
+"""Benchmark-regression smoke gate (CI): the engine serving benches must be
+present in BENCH_engine.json and every bit-exactness flag must be true.
+
+Usage: python benchmarks/check.py [path/to/BENCH_engine.json]
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+REQUIRED = ("engine_planner_query_batched", "engine_streaming_append")
+EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact", "allclose")
+
+
+def main(path: str = "BENCH_engine.json") -> int:
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except FileNotFoundError:
+        print(f"FAIL: {path} not found — did benchmarks/run.py run?")
+        return 1
+    failures = [f"missing bench row: {name}"
+                for name in REQUIRED if name not in data]
+    for name, entry in sorted(data.items()):
+        derived = entry.get("derived", "")
+        failures += [f"{name}: {flag}=False ({derived})"
+                     for flag in EXACTNESS_FLAGS if f"{flag}=False" in derived]
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print(f"benchmark smoke OK ({len(data)} rows, "
+          f"{len(REQUIRED)} required engine rows present)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

@@ -1,25 +1,35 @@
 """Benchmark harness — one entry per paper table/figure, plus kernel
 microbenchmarks and indexing throughput.  Prints ``name,us_per_call,derived``
 CSV rows (derived = the figure-of-merit for that table: model error, MB/s,
-pW/bit, ...).
+pW/bit, ...) and writes the same rows to ``BENCH_engine.json`` (override
+with the ``BENCH_JSON`` env var) so CI can archive the perf trajectory and
+gate on the bit-exactness flags (see benchmarks/check.py).
 
   fig6_freq_power     — frequency & active power vs V_dd (paper Fig. 6)
   fig7_energy         — energy/cycle vs V_dd (paper Fig. 7; 162.9 pJ @ 1.2 V)
   fig8_leakage        — standby current vs V_bb (paper Fig. 8)
   table1_spb          — standby power per bit comparison (paper Table I)
   bic_create_cpu      — end-to-end BIC pipeline throughput, CPU-measured
-  bic_query_cpu       — multi-dimensional query throughput
+  bic_query_cpu       — multi-dimensional query throughput (via the planner,
+                        i.e. the real serving path)
   engine_planner_query     — boolean predicate-tree query through the
                              engine planner (DNF -> fused passes,
                              jit-cached executors)
+  engine_planner_query_batched — 1000 mixed-shape predicate trees served
+                             through engine.batch (plan-shape bucketing,
+                             vmapped executors) vs a sequential execute loop
   engine_streaming_append  — incremental index append (StreamingIndexer)
-                             vs a from-scratch rebuild of the same records
+                             vs a from-scratch rebuild of the same records;
+                             reports jitted-splice retrace behaviour and the
+                             scanned append_many path
   kernel_*            — Pallas kernels (interpret mode) vs oracle timings
   elastic_energy      — multi-core elastic standby-power policy (Fig. 4)
   tpu_projection      — v5e roofline projection of indexing throughput
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
@@ -32,7 +42,8 @@ sys.path.insert(0, "src")
 from repro.core import power  # noqa: E402
 from repro.core.elastic import ElasticScheduler, PowerState  # noqa: E402
 from repro.engine import backends as engine_backends  # noqa: E402
-from repro.engine import planner  # noqa: E402
+from repro.engine import batch as engine_batch  # noqa: E402
+from repro.engine import planner, runtime  # noqa: E402
 from repro.engine.planner import key  # noqa: E402
 from repro.engine.runtime import StreamingIndexer  # noqa: E402
 from repro.kernels import ops, ref  # noqa: E402
@@ -121,18 +132,20 @@ def bic_create_cpu():
 
 
 def bic_query_cpu():
+    """Multi-dimensional query through the REAL serving path — the engine
+    planner (plan-constant cache + jit-cached fused passes) — not a direct
+    ref.bitmap_query call that would bypass what production serves."""
     m, nw = 256, 4096                    # 256 keys x 131072 records
     rng = np.random.default_rng(1)
     bi = jnp.asarray(rng.integers(0, 2 ** 32, (m, nw), dtype=np.uint32))
+    pl = planner.plan(key(2) & key(4) & ~key(5))
 
-    @jax.jit
-    def q(bi):
-        rows = bi[jnp.asarray([2, 4, 5])]
-        return ref.bitmap_query(rows, jnp.asarray([0, 0, 1]))
+    def q():
+        return planner.execute(bi, pl, num_records=nw * 32, backend="ref")
 
-    us = timeit(q, bi)
+    us = timeit(q)
     row("bic_query_cpu", us,
-        f"Mrecords/s={(nw*32) / us:.0f} (3-operand query)")
+        f"Mrecords/s={(nw*32) / us:.0f} (3-operand query via planner)")
 
 
 # ------------------------------------------------------------ engine layer
@@ -153,19 +166,90 @@ def engine_planner_query():
         f"Mrecords/s={n / us:.0f} passes={pl.num_passes} shape={pl.shape}")
 
 
+def _mixed_predicates(m: int, count: int, seed: int) -> list:
+    """A serving-style query mix: seven plan-shape families over random
+    key ids (single literals, AND chains, OR-of-AND trees, pure ORs)."""
+    rng = np.random.default_rng(seed)
+
+    def k() -> int:
+        return int(rng.integers(0, m))
+
+    preds = []
+    for i in range(count):
+        fam = i % 7
+        if fam == 0:
+            p = key(k())
+        elif fam == 1:
+            p = key(k()) & ~key(k())
+        elif fam == 2:
+            p = key(k()) & key(k()) & ~key(k())
+        elif fam == 3:
+            p = (key(k()) | key(k())) & key(k())
+        elif fam == 4:
+            p = (key(k()) | key(k())) & (key(k()) | key(k()))
+        elif fam == 5:
+            p = key(k()) | key(k()) | key(k())
+        else:
+            p = ((key(k()) & key(k()) & key(k())) |
+                 (key(k()) & key(k()) & key(k())))
+        preds.append(p)
+    return preds
+
+
+def engine_planner_query_batched():
+    """1000 mixed-shape predicate trees against one index: a sequential
+    planner.execute loop (one dispatch per query) vs engine.batch
+    (plan-shape bucketing -> a handful of vmapped jit-cached dispatches)."""
+    m, n, nq = 256, 65536, 1000
+    rng = np.random.default_rng(7)
+    bi = jnp.asarray(rng.integers(0, 2 ** 32, (m, n // 32), dtype=np.uint32))
+    plans = [planner.plan(p) for p in _mixed_predicates(m, nq, 8)]
+
+    def seq():
+        return [planner.execute(bi, pl, num_records=n, backend="ref")
+                for pl in plans]
+
+    def bat():
+        return engine_batch.execute_many(bi, plans, num_records=n,
+                                         backend="ref")
+
+    us_seq = timeit(seq, reps=2, warmup=1)
+    us_bat = timeit(bat, reps=5, warmup=1)
+    rows_b, counts_b = bat()
+    seq_out = seq()
+    rows_s = jnp.stack([r for r, _ in seq_out])
+    counts_s = jnp.stack([c for _, c in seq_out])
+    ok = bool(jnp.all(rows_b == rows_s)) and bool(jnp.all(counts_b == counts_s))
+    shapes = {engine_batch.canonical_shape(pr)
+              for pr in (engine_batch.lower(pl) for pl in plans) if pr}
+    row("engine_planner_query_batched", us_bat,
+        f"speedup_vs_sequential={us_seq/us_bat:.1f}x queries={nq} "
+        f"buckets={len(shapes)} seq_us={us_seq:.0f} "
+        f"Mqueries/s={nq / us_bat:.2f} bitexact={ok}")
+
+
 def engine_streaming_append():
     """Incremental append of 512-record blocks vs from-scratch rebuild at
-    the same total size (the rebuild cost grows with N; append does not)."""
+    the same total size (the rebuild cost grows with N; append does not).
+    The shift/carry splice is jitted against a capacity buffer, so
+    steady-state appends reuse one trace; append_many folds all splices in
+    a single scanned dispatch."""
     m, w, block, nblocks = 64, 16, 512, 8
     rng = np.random.default_rng(6)
     keys = jnp.asarray(rng.integers(0, 256, (m,), dtype=np.int32))
     blocks = [jnp.asarray(rng.integers(0, 256, (block, w), dtype=np.int32))
               for _ in range(nblocks)]
+    cap = (nblocks * block) // 32 + block // 32 + 2   # no growth retraces
 
     def stream():
-        si = StreamingIndexer(keys, backend="ref")
+        si = StreamingIndexer(keys, backend="ref", capacity_words=cap)
         for b in blocks:
             si.append(b)
+        return si.index.packed
+
+    def stream_batched():
+        si = StreamingIndexer(keys, backend="ref", capacity_words=cap)
+        si.append_many(jnp.stack(blocks))
         return si.index.packed
 
     def rebuild():
@@ -173,11 +257,21 @@ def engine_streaming_append():
         return be.create_index(jnp.concatenate(blocks, axis=0), keys)
 
     us_s = timeit(stream, reps=3, warmup=1)
+    us_m = timeit(stream_batched, reps=3, warmup=1)
     us_r = timeit(rebuild, reps=3, warmup=1)
-    ok = bool(jnp.all(stream() == rebuild()))
+    # splice retrace check: appends after the first must reuse the trace
+    si = StreamingIndexer(keys, backend="ref", capacity_words=cap)
+    si.append(blocks[0])
+    traces_after_first = runtime.splice_cache_size()
+    for b in blocks[1:]:
+        si.append(b)
+    retraces = runtime.splice_cache_size() - traces_after_first
+    ok = (bool(jnp.all(stream() == rebuild())) and
+          bool(jnp.all(stream_batched() == rebuild())))
     mb = nblocks * block * w / 1e6
     row("engine_streaming_append", us_s,
-        f"MB/s={mb / (us_s/1e6):.1f} rebuild_us={us_r:.0f} "
+        f"MB/s={mb / (us_s/1e6):.1f} append_many_us={us_m:.0f} "
+        f"rebuild_us={us_r:.0f} splice_retraces_per_block={retraces} "
         f"bitexact_vs_rebuild={ok}")
 
 
@@ -241,14 +335,21 @@ def tpu_projection():
 
 ALL = [fig6_freq_power, fig7_energy, fig8_leakage, table1_spb,
        bic_create_cpu, bic_query_cpu, engine_planner_query,
-       engine_streaming_append, kernel_cam_match, kernel_bit_transpose,
-       kernel_bitmap_query, elastic_energy, tpu_projection]
+       engine_planner_query_batched, engine_streaming_append,
+       kernel_cam_match, kernel_bit_transpose, kernel_bitmap_query,
+       elastic_energy, tpu_projection]
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     for fn in ALL:
         fn()
+    path = os.environ.get("BENCH_JSON", "BENCH_engine.json")
+    with open(path, "w") as f:
+        json.dump({name: {"us_per_call": us, "derived": derived}
+                   for name, us, derived in ROWS}, f, indent=2)
+        f.write("\n")
+    print(f"# wrote {path} ({len(ROWS)} rows)")
 
 
 if __name__ == "__main__":

@@ -23,6 +23,7 @@ from typing import Literal, Sequence
 import jax
 
 from repro.engine import backends as _backends
+from repro.engine import batch as _batch
 from repro.engine import planner as _planner
 from repro.engine.policy import PACK, BitmapIndex
 
@@ -82,6 +83,19 @@ class BICCore:
         return _planner.execute(index.packed, where,
                                 num_records=index.num_records,
                                 backend=self.config.backend)
+
+    def query_many(self, index: BitmapIndex,
+                   predicates: Sequence[_planner.Pred]
+                   ) -> tuple[jax.Array, jax.Array]:
+        """Serve a whole batch of ``where=``-style predicate trees (or
+        pre-built plans) in a handful of vmapped dispatches — the engine
+        buckets plans by shape instead of looping ``query`` per tree.
+
+        Returns (rows (Q, Nw) uint32, counts (Q,) int32) in input order,
+        bit-identical to calling :meth:`query` per predicate."""
+        return _batch.execute_many(index.packed, predicates,
+                                   num_records=index.num_records,
+                                   backend=self.config.backend)
 
     def batch_create(self, records: jax.Array, keys: jax.Array) -> BitmapIndex:
         """Index B batches of records with shared keys by flattening the

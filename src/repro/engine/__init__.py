@@ -8,9 +8,15 @@ Three tiers (see ARCHITECTURE.md):
     ``auto``) behind one ``create_index`` / ``query`` interface.
   * :mod:`repro.engine.planner`  — boolean query planner: AND/OR/NOT
     predicate trees normalized to DNF and compiled to a minimal sequence of
-    fused bitmap-kernel passes, with jit caching keyed on plan shape.
+    fused bitmap-kernel passes, with jit caching keyed on plan shape, a
+    DNF size guard (composite sub-plans for adversarial trees),
+    common-clause factoring, and a device-resident plan-constant cache.
+  * :mod:`repro.engine.batch`    — batched query serving: many predicate
+    trees per dispatch via plan-shape bucketing, identity-row padding, and
+    vmapped jit-cached bucket executors.
   * :mod:`repro.engine.runtime`  — streaming multi-core runtime: incremental
-    index append and shard_map dispatch fused with elastic energy accounting.
+    index append (jitted shift/carry splice, scanned batch appends) and
+    shard_map dispatch fused with elastic energy accounting.
 
 Symbols are resolved lazily so that lower layers (``repro.kernels.ops``
 imports the policy; ``repro.core`` imports backends/planner; the runtime
@@ -32,18 +38,24 @@ _EXPORTS = {
     # planner
     "Pred": "planner", "Key": "planner", "And": "planner", "Or": "planner",
     "Not": "planner", "key": "planner", "plan": "planner",
-    "QueryPlan": "planner", "execute": "planner",
+    "QueryPlan": "planner", "CompositePlan": "planner",
+    "FactoredPlan": "planner", "factor": "planner",
+    "total_clauses": "planner", "execute": "planner",
     "from_include_exclude": "planner",
+    # batch
+    "execute_many": "batch",
     # runtime
     "StreamingIndexer": "runtime", "MulticoreRuntime": "runtime",
-    "multicore_create_index": "runtime",
+    "multicore_create_index": "runtime", "append_packed": "runtime",
+    "fold_block_indexes": "runtime",
 }
 
-__all__ = sorted(_EXPORTS) + ["policy", "backends", "planner", "runtime"]
+__all__ = sorted(_EXPORTS) + ["policy", "backends", "planner", "batch",
+                              "runtime"]
 
 
 def __getattr__(name):
-    if name in ("policy", "backends", "planner", "runtime"):
+    if name in ("policy", "backends", "planner", "batch", "runtime"):
         return importlib.import_module(f"{__name__}.{name}")
     mod = _EXPORTS.get(name)
     if mod is None:

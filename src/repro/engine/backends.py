@@ -49,13 +49,24 @@ class Backend:
 _REGISTRY: dict[str, Backend] = {}
 
 
+# Compiled executors (sequential, factored, batched, vmapped-create) close
+# over Backend objects; re-registering a name must drop them so stale
+# backends never keep serving.  getattr-guarded: a module may be mid-import.
+_COMPILED_CACHES = (
+    ("repro.engine.planner", ("_compiled", "_compiled_factored")),
+    ("repro.engine.batch", ("_executor",)),
+    ("repro.engine.runtime", ("_vmapped_create",)),
+)
+
+
 def register_backend(backend: Backend) -> Backend:
     _REGISTRY[backend.name] = backend
-    # Compiled query executors close over the Backend object; drop them so a
-    # re-registered name can't keep dispatching to the stale backend.
-    planner = sys.modules.get("repro.engine.planner")
-    if planner is not None:
-        planner._compiled.cache_clear()
+    for modname, attrs in _COMPILED_CACHES:
+        mod = sys.modules.get(modname)
+        for attr in attrs if mod is not None else ():
+            cache = getattr(mod, attr, None)
+            if cache is not None:
+                cache.cache_clear()
     return backend
 
 

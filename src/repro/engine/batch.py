@@ -1,0 +1,242 @@
+"""Batched query serving: many predicate trees per dispatch.
+
+``planner.execute`` serves one predicate tree per call — fine for ad-hoc
+queries, but a serving workload is a *mix* of thousands of small trees, and
+at that scale per-call dispatch dominates the actual bitwise work (the same
+observation that drives bulk bitwise engines: amortize dispatch over large
+batches of passes).  This module restructures the serving path:
+
+  1. **Lower** every plan to a uniform *pass program*: a tuple of groups,
+     each group a tuple of fused AND-passes ``(literals, post_invert)``.
+     A plain DNF clause is a one-pass group; a factored group is a common
+     AND pass plus a De-Morgan OR pass (``post_invert`` folds the final
+     negation into an xor mask).  Query result = OR over groups of the
+     AND over each group's passes.
+  2. **Bucket** programs by canonical padded shape ``(G groups, P passes,
+     L literals)`` — G and L round up to powers of two so a heterogeneous
+     1000-query mix lands in a handful of buckets instead of one trace per
+     exact shape.
+  3. **Pad with identity rows**: the packed index is augmented with one
+     virtual all-ones row at index M.  Padded literal slots select it
+     non-inverted (AND-identity); padded group slots xor-mask their pass to
+     all-zeros (OR-identity).  Padding never changes a result bit.
+  4. **Execute each bucket as ONE vmapped, jit-cached call** over
+     ``(Q, G, P, L)`` literal-selector arrays.  Executors cache on
+     ``(backend, G, P, L)`` only — key ids, inversion flags, and the record
+     count all enter traced.
+
+Composite plans (the DNF size-guard fallback) and contradictions are served
+out-of-band — composites through ``planner.execute``, contradictions as
+constant zeros — and spliced back into input order.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.engine import backends, planner, policy
+
+#: One pass: (literals tuple[(key, inverted)], post_invert).  Program:
+#: tuple of groups, each a tuple of passes.
+PassProgram = tuple
+
+
+def lower(pl: Union[planner.QueryPlan, planner.FactoredPlan]) -> PassProgram:
+    """Lower a plan to the uniform group/pass form the batched executor
+    runs.  ``OR(lits) == ~AND(~lits)``: factored OR sides enter with
+    flipped literal inversions and ``post_invert=True``."""
+    if isinstance(pl, planner.QueryPlan):
+        return tuple(((c, False),) for c in pl.clauses)
+    groups = []
+    for common, ored in pl.groups:
+        passes = []
+        if common:
+            passes.append((common, False))
+        if ored:
+            passes.append((tuple((i, not v) for i, v in ored), True))
+        groups.append(tuple(passes))
+    return tuple(groups)
+
+
+def _pow2_ceil(x: int) -> int:
+    p = 1
+    while p < x:
+        p *= 2
+    return p
+
+
+def canonical_shape(prog: PassProgram) -> tuple[int, int, int]:
+    """(G, P, L) bucket key: groups and literals round up to powers of two
+    (padding is identity-exact), pass depth stays exact (1 or 2)."""
+    g = _pow2_ceil(len(prog))
+    p = max(len(passes) for passes in prog)
+    l = _pow2_ceil(max(len(lits) for passes in prog for lits, _ in passes))
+    return g, p, l
+
+
+@functools.lru_cache(maxsize=64)
+def _executor(backend_name: str, g: int, p: int, l: int):
+    """One jitted batched executor per (backend, canonical shape): vmap over
+    queries of [OR over groups of [AND over passes of [fused kernel pass]]],
+    then one tail-mask + popcount per query."""
+    backend = backends.get_backend(backend_name)
+
+    def run(aug, num_records, sels, invs, post):
+        # aug (M+1, Nw) with the all-ones row at M; sels/invs (Q, g, p, l);
+        # post (Q, g, p) uint32 xor masks (0 or 0xFFFFFFFF).
+        def one_pass(sel, inv, po):
+            row, _ = backend.query(aug[sel], inv)   # count is dead code
+            return row ^ po
+
+        def one_query(sel, inv, po):
+            rows = jax.vmap(jax.vmap(one_pass))(sel, inv, po)  # (g, p, Nw)
+            grp = rows[:, 0]
+            for pi in range(1, p):
+                grp = grp & rows[:, pi]
+            acc = grp[0]
+            for gi in range(1, g):
+                acc = acc | grp[gi]
+            return policy.mask_tail(acc, num_records)
+
+        return jax.vmap(one_query)(sels, invs, post)
+
+    return jax.jit(run)
+
+
+def batched_executor_cache_info():
+    """Exposed for tests/benchmarks: the bucket-executor cache statistics."""
+    return _executor.cache_info()
+
+
+@functools.lru_cache(maxsize=4096)
+def _lowered(pl) -> tuple[PassProgram, tuple[int, int, int] | None, int, int]:
+    """Per-plan lowering cache: (program, canonical shape, min/max key id).
+    Plans hash by value, so a re-submitted (or structurally equal) plan
+    skips lowering, shape derivation, and range-scan work entirely."""
+    prog = lower(pl)
+    if not prog:
+        return prog, None, 0, -1
+    ids = [i for grp in prog for lits, _ in grp for i, _ in lits]
+    return prog, canonical_shape(prog), min(ids), max(ids)
+
+
+def _bucket_arrays(progs: Sequence[PassProgram], shape: tuple[int, int, int],
+                   ones_idx: int):
+    """Pack a bucket's programs into dense (Q, G, P, L) selector arrays.
+
+    Defaults are the identities: literal slots select the virtual all-ones
+    row non-inverted; pad groups xor-mask pass 0 to all-zeros."""
+    g, p, l = shape
+    q = len(progs)
+    sels = np.full((q, g, p, l), ones_idx, np.int32)
+    invs = np.zeros((q, g, p, l), np.int32)
+    post = np.zeros((q, g, p), np.uint32)
+    for qi, prog in enumerate(progs):
+        for gi in range(g):
+            if gi >= len(prog):
+                post[qi, gi, 0] = 0xFFFFFFFF      # pad group -> all-zeros
+                continue
+            for pi, (lits, pinv) in enumerate(prog[gi]):
+                for li, (kidx, linv) in enumerate(lits):
+                    sels[qi, gi, pi, li] = kidx
+                    invs[qi, gi, pi, li] = int(linv)
+                if pinv:
+                    post[qi, gi, pi] = 0xFFFFFFFF
+    return sels, invs, post
+
+
+def execute_many(packed: jax.Array,
+                 predicates: Sequence[Union[planner.Pred, planner.QueryPlan,
+                                            planner.FactoredPlan,
+                                            planner.CompositePlan]], *,
+                 num_records: int, backend: str = "auto",
+                 max_clauses: int | None = planner.DEFAULT_MAX_CLAUSES,
+                 factor: bool = False
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Serve a batch of predicate trees (or pre-built plans) over one packed
+    (M, Nw) index in a handful of vmapped dispatches.
+
+    Returns (rows (Q, Nw) uint32, counts (Q,) int32) in input order, each
+    row tail-masked past ``num_records`` — bit-identical to a sequential
+    loop of :func:`planner.execute`.  ``factor=True`` additionally runs
+    common-clause factoring on each DNF plan before lowering.
+    """
+    name = backends.resolve_backend(backend)
+    m, nw = packed.shape
+    plans = []
+    for pred in predicates:
+        if isinstance(pred, (planner.QueryPlan, planner.FactoredPlan,
+                             planner.CompositePlan)):
+            pl = pred
+        else:
+            # validate on the raw tree, BEFORE simplification, so a typo'd
+            # id inside a contradictory/absorbed branch still raises
+            planner.check_key_range(planner.key_indices(pred), m)
+            pl = planner.plan(pred, max_clauses=max_clauses)
+        if factor and isinstance(pl, planner.QueryPlan) and pl.clauses:
+            pl = planner.factor(pl)
+        plans.append(pl)
+
+    q = len(plans)
+    if q == 0:
+        return (jnp.zeros((0, nw), jnp.uint32), jnp.zeros((0,), jnp.int32))
+
+    buckets: dict[tuple[int, int, int], tuple[list, list]] = {}
+    composite: list[int] = []
+    zeros: list[int] = []
+    for qi, pl in enumerate(plans):
+        if isinstance(pl, planner.CompositePlan):
+            composite.append(qi)       # planner.execute validates key range
+            continue
+        prog, shape, lo, hi = _lowered(pl)
+        if not prog:
+            zeros.append(qi)           # contradiction: constant all-zero
+            continue
+        if lo < 0 or hi >= m:   # cached min/max make the common case free
+            planner.check_key_range(planner.plan_key_indices(pl), m)
+        idxs, progs = buckets.setdefault(shape, ([], []))
+        idxs.append(qi)
+        progs.append(prog)
+
+    # One result piece per bucket (plus zeros / composite fallbacks), then a
+    # single permutation gather back into input order — no per-bucket
+    # scatter over the (Q, Nw) output.
+    pieces_r: list[jax.Array] = []
+    pieces_c: list[jax.Array] = []
+    order: list[int] = []
+    if buckets:
+        aug = jnp.concatenate(
+            [packed, jnp.full((1, nw), 0xFFFFFFFF, dtype=jnp.uint32)], axis=0)
+        nrec = jnp.int32(num_records)
+        for shape, (idxs, progs) in buckets.items():
+            sels, invs, post = _bucket_arrays(progs, shape, ones_idx=m)
+            rws, cts = _executor(name, *shape)(
+                aug, nrec, jnp.asarray(sels), jnp.asarray(invs),
+                jnp.asarray(post))
+            pieces_r.append(rws)
+            pieces_c.append(cts)
+            order.extend(idxs)
+    if zeros:
+        pieces_r.append(jnp.zeros((len(zeros), nw), jnp.uint32))
+        pieces_c.append(jnp.zeros((len(zeros),), jnp.int32))
+        order.extend(zeros)
+    for qi in composite:                # size-guard fallback: out-of-band
+        r, c = planner.execute(packed, plans[qi], num_records=num_records,
+                               backend=name)
+        pieces_r.append(r[None])
+        pieces_c.append(c[None])
+        order.append(qi)
+
+    rows_all = pieces_r[0] if len(pieces_r) == 1 else jnp.concatenate(pieces_r)
+    counts_all = (pieces_c[0] if len(pieces_c) == 1
+                  else jnp.concatenate(pieces_c))
+    if order == list(range(q)):         # single bucket in input order
+        return rows_all, counts_all
+    inv = np.empty(q, np.int32)
+    inv[np.asarray(order, np.int32)] = np.arange(q, dtype=np.int32)
+    inv = jnp.asarray(inv)
+    return rows_all[inv], counts_all[inv]

@@ -13,6 +13,22 @@ of those passes:
   4. OR the per-clause result rows, then apply the canonical tail mask and
      popcount once.
 
+Three serving-path refinements sit on top of the plain DNF pipeline:
+
+  * **Plan-size guard** — DNF distribution is exponential on adversarial
+    trees (an AND of k ORs is 2^k clauses).  :func:`plan` estimates the
+    clause count *before* distributing and, past ``max_clauses``, falls
+    back to a :class:`CompositePlan` that evaluates the offending AND/OR
+    node as separate sub-plans whose packed rows combine with ``&``/``|``.
+  * **Common-clause factoring** — :func:`factor` groups clauses that differ
+    in exactly one literal: ``(a&b&c) | (a&b&d)`` becomes ``a&b & (c|d)``,
+    one shared fused pass plus one De-Morgan OR pass instead of one pass
+    per clause (pure single-literal clauses ``a|b|c`` collapse to a single
+    pass the same way).
+  * **Plan-constant cache** — the gather/inversion literal arrays for a
+    plan are built once and kept device-resident, keyed on the plan, so a
+    hot serving loop never re-uploads ``jnp.asarray`` literals per call.
+
 Compiled executors are jit-cached keyed on *plan shape* (backend, literals
 per clause) — two plans with the same shape but different key ids or record
 counts share one trace, because the gather indices, inversion flags, and
@@ -133,9 +149,116 @@ class QueryPlan:
         return len(self.clauses)
 
 
-def plan(pred: Pred) -> QueryPlan:
-    """Normalize + simplify a predicate tree into an executable plan."""
-    return QueryPlan(tuple(_simplify(_dnf(pred, neg=False))))
+@dataclasses.dataclass(frozen=True)
+class CompositePlan:
+    """Size-guard fallback: AND/OR combination of independently executed
+    sub-plans.  Leaf rows are tail-masked, and ``&``/``|`` preserve zeroed
+    tail bits, so the combined row needs only a final popcount."""
+    op: str                                  # "and" | "or"
+    parts: tuple                             # of QueryPlan | CompositePlan
+
+    @property
+    def num_passes(self) -> int:
+        return sum(p.num_passes for p in self.parts)
+
+
+@dataclasses.dataclass(frozen=True)
+class FactoredPlan:
+    """Factored DNF: each group is ``AND(common) & OR(ored)`` (either side
+    may be empty, not both); group rows OR together."""
+    groups: tuple                # of (common: tuple[Literal], ored: tuple[Literal])
+
+    @property
+    def shape(self) -> tuple[tuple[int, int], ...]:
+        return tuple((len(c), len(d)) for c, d in self.groups)
+
+    @property
+    def num_passes(self) -> int:
+        return sum((1 if c else 0) + (1 if d else 0) for c, d in self.groups)
+
+
+AnyPlan = Union[QueryPlan, FactoredPlan, CompositePlan]
+
+#: Past this many DNF clauses, ``plan`` stops distributing and emits a
+#: CompositePlan instead (sub-plans combined by row-wise AND/OR).
+DEFAULT_MAX_CLAUSES = 128
+
+
+def _dnf_size(p: Pred, neg: bool, cap: int) -> int:
+    """Clause count full distribution would produce, saturating at cap+1
+    (never materializes a clause, so adversarial trees stay cheap)."""
+    if isinstance(p, Key):
+        return 1
+    if isinstance(p, Not):
+        return _dnf_size(p.child, not neg, cap)
+    sizes = [_dnf_size(c, neg, cap) for c in p.children]
+    if isinstance(p, And) != neg:            # conjunctive: sizes multiply
+        out = 1
+        for s in sizes:
+            out *= s
+            if out > cap:
+                return cap + 1
+        return out
+    return min(sum(sizes), cap + 1)
+
+
+def _plan_guarded(p: Pred, neg: bool, max_clauses: int) -> AnyPlan:
+    if _dnf_size(p, neg, max_clauses) <= max_clauses:
+        return QueryPlan(tuple(_simplify(_dnf(p, neg))))
+    if isinstance(p, Not):
+        return _plan_guarded(p.child, not neg, max_clauses)
+    conjunctive = isinstance(p, And) != neg
+    parts = tuple(_plan_guarded(c, neg, max_clauses) for c in p.children)
+    return CompositePlan("and" if conjunctive else "or", parts)
+
+
+def plan(pred: Pred, *, max_clauses: int | None = DEFAULT_MAX_CLAUSES
+         ) -> AnyPlan:
+    """Normalize + simplify a predicate tree into an executable plan.
+
+    Returns a :class:`QueryPlan` whenever the simplified DNF fits in
+    ``max_clauses`` clauses; otherwise a :class:`CompositePlan` that keeps
+    the offending AND/OR nodes as separate sub-plans instead of distributing
+    them (``max_clauses=None`` disables the guard)."""
+    if max_clauses is None:
+        return QueryPlan(tuple(_simplify(_dnf(pred, neg=False))))
+    return _plan_guarded(pred, False, max_clauses)
+
+
+def total_clauses(pl: AnyPlan) -> int:
+    """Fused-pass clause count across a plan tree — the quantity the size
+    guard bounds per leaf."""
+    if isinstance(pl, QueryPlan):
+        return len(pl.clauses)
+    if isinstance(pl, FactoredPlan):
+        return len(pl.groups)
+    return sum(total_clauses(p) for p in pl.parts)
+
+
+def factor(qp: QueryPlan) -> FactoredPlan:
+    """Common-clause factoring: clauses that differ in exactly one literal
+    share their common AND pass — ``(a&b&c)|(a&b&d)`` -> ``a&b & (c|d)``.
+
+    Greedy largest-group-first; each clause joins at most one group, and
+    unfactored clauses pass through as ``(clause, ())`` groups."""
+    clauses = qp.clauses
+    cand: dict[tuple, list[tuple[int, Literal]]] = {}
+    for ci, c in enumerate(clauses):
+        cset = frozenset(c)
+        for lit in c:
+            base = tuple(sorted(cset - {lit}))
+            cand.setdefault(base, []).append((ci, lit))
+    used: set[int] = set()
+    groups: list[tuple[tuple, tuple]] = []
+    for base, members in sorted(cand.items(),
+                                key=lambda kv: (-len(kv[1]), kv[0])):
+        live = [(ci, lit) for ci, lit in members if ci not in used]
+        if len(live) < 2:
+            continue
+        used.update(ci for ci, _ in live)
+        groups.append((base, tuple(sorted(lit for _, lit in live))))
+    groups += [(c, ()) for ci, c in enumerate(clauses) if ci not in used]
+    return FactoredPlan(tuple(sorted(groups)))
 
 
 def key_indices(pred: Pred) -> set[int]:
@@ -173,12 +296,123 @@ def _compiled(backend_name: str, shape: tuple[int, ...]):
     return jax.jit(run)
 
 
+@functools.lru_cache(maxsize=256)
+def _compiled_factored(backend_name: str,
+                       shape: tuple[tuple[int, int], ...]):
+    """Executor for factored plans: per group one shared AND pass over the
+    common literals plus one De-Morgan pass for the OR'd literals
+    (``OR(lits) == ~AND(~lits)``; the caller pre-flips those inversion
+    flags).  Same shape-keyed jit caching as the plain executor."""
+    backend = backends.get_backend(backend_name)
+
+    def run(packed, num_records, consts):
+        nw = packed.shape[1]
+        acc = jnp.zeros((nw,), jnp.uint32)
+        for c_sel, c_inv, d_sel, d_inv in consts:
+            if c_sel is not None:
+                row, _ = backend.query(packed[c_sel], c_inv)
+            else:
+                row = jnp.full((nw,), 0xFFFFFFFF, dtype=jnp.uint32)
+            if d_sel is not None:
+                r, _ = backend.query(packed[d_sel], d_inv)
+                row = row & ~r
+            acc = acc | row
+        return policy.mask_tail(acc, num_records)
+
+    return jax.jit(run)
+
+
+@functools.lru_cache(maxsize=4096)
+def _plan_constants(clauses: tuple):
+    """Device-resident gather/inversion literal arrays, keyed on the plan's
+    clauses — a hot serving loop re-executing a plan never re-uploads them."""
+    sels = tuple(jnp.asarray([i for i, _ in c], jnp.int32) for c in clauses)
+    invs = tuple(jnp.asarray([int(inv) for _, inv in c], jnp.int32)
+                 for c in clauses)
+    return sels, invs
+
+
+@functools.lru_cache(maxsize=4096)
+def _factored_constants(groups: tuple):
+    """Device-resident constants for a factored plan; OR-side inversion
+    flags enter pre-flipped for the De-Morgan pass."""
+    out = []
+    for common, ored in groups:
+        c_sel = jnp.asarray([i for i, _ in common], jnp.int32) if common else None
+        c_inv = (jnp.asarray([int(v) for _, v in common], jnp.int32)
+                 if common else None)
+        d_sel = jnp.asarray([i for i, _ in ored], jnp.int32) if ored else None
+        d_inv = (jnp.asarray([int(not v) for _, v in ored], jnp.int32)
+                 if ored else None)
+        out.append((c_sel, c_inv, d_sel, d_inv))
+    return tuple(out)
+
+
 def compiled_plan_cache_info():
     """Exposed for tests/benchmarks: the executor cache statistics."""
     return _compiled.cache_info()
 
 
-def execute(packed: jax.Array, predicate: Union[Pred, QueryPlan], *,
+def plan_constant_cache_info():
+    """Exposed for tests/benchmarks: the plan-constant cache statistics."""
+    return _plan_constants.cache_info()
+
+
+def check_key_range(mentioned: Iterable[int], num_keys: int) -> None:
+    """Raise on any key id outside [0, num_keys) — a silent jnp gather
+    clamp would mis-select, and the batch layer's virtual identity row
+    lives at index ``num_keys``."""
+    bad = sorted(i for i in mentioned if not 0 <= i < num_keys)
+    if bad:
+        raise ValueError(f"key indices {bad} out of range for an index "
+                         f"with {num_keys} keys")
+
+
+def plan_key_indices(pl: AnyPlan) -> set[int]:
+    """Every key index a compiled plan gathers."""
+    if isinstance(pl, QueryPlan):
+        return {i for c in pl.clauses for i, _ in c}
+    if isinstance(pl, FactoredPlan):
+        return {i for c, d in pl.groups for i, _ in (*c, *d)}
+    out: set[int] = set()
+    for p in pl.parts:
+        out |= plan_key_indices(p)
+    return out
+
+
+def _run(packed: jax.Array, pl: AnyPlan, num_records: int, name: str
+         ) -> tuple[jax.Array, jax.Array]:
+    nw = packed.shape[1]
+    if isinstance(pl, QueryPlan):
+        if not pl.clauses:   # contradiction: provably empty, no kernel pass
+            return (jnp.zeros((nw,), jnp.uint32), jnp.zeros((), jnp.int32))
+        sels, invs = _plan_constants(pl.clauses)
+        return _compiled(name, pl.shape)(packed, jnp.int32(num_records),
+                                         sels, invs)
+    if isinstance(pl, FactoredPlan):
+        if not pl.groups:
+            return (jnp.zeros((nw,), jnp.uint32), jnp.zeros((), jnp.int32))
+        consts = _factored_constants(pl.groups)
+        return _compiled_factored(name, pl.shape)(
+            packed, jnp.int32(num_records), consts)
+    row = _composite_row(packed, pl, num_records, name)
+    count = jax.lax.population_count(row).astype(jnp.int32).sum()
+    return row, count
+
+
+def _composite_row(packed, node, num_records, name):
+    """Leaf rows come back tail-masked, and AND/OR preserve zeroed tails, so
+    the composite needs no second mask pass."""
+    if not isinstance(node, CompositePlan):
+        return _run(packed, node, num_records, name)[0]
+    rows = [_composite_row(packed, p, num_records, name) for p in node.parts]
+    out = rows[0]
+    for r in rows[1:]:
+        out = (out & r) if node.op == "and" else (out | r)
+    return out
+
+
+def execute(packed: jax.Array, predicate: Union[Pred, AnyPlan], *,
             num_records: int, backend: str = "auto"
             ) -> tuple[jax.Array, jax.Array]:
     """Run a predicate (or pre-built plan) over a packed (M, Nw) index.
@@ -186,29 +420,17 @@ def execute(packed: jax.Array, predicate: Union[Pred, QueryPlan], *,
     Returns (packed result row (Nw,) uint32, matching-record count), with
     tail bits past ``num_records`` masked to zero.
     """
-    if isinstance(predicate, QueryPlan):
+    if isinstance(predicate, (QueryPlan, FactoredPlan, CompositePlan)):
         pl = predicate
-        mentioned = {i for c in pl.clauses for i, _ in c}
+        mentioned = plan_key_indices(pl)
     else:
         # validate on the raw tree, BEFORE simplification, so a typo'd id
         # inside a contradictory/absorbed branch still raises
         mentioned = key_indices(predicate)
         pl = plan(predicate)
     name = backends.resolve_backend(backend)
-    num_keys = packed.shape[0]
-    bad = sorted(i for i in mentioned if not 0 <= i < num_keys)
-    if bad:                  # a silent jnp gather clamp would mis-select
-        raise ValueError(f"key indices {bad} out of range for an index "
-                         f"with {num_keys} keys")
-    nw = packed.shape[1]
-    if not pl.clauses:       # contradiction: provably empty, no kernel pass
-        return (jnp.zeros((nw,), jnp.uint32), jnp.zeros((), jnp.int32))
-    sels = tuple(jnp.asarray([i for i, _ in c], jnp.int32)
-                 for c in pl.clauses)
-    invs = tuple(jnp.asarray([int(inv) for _, inv in c], jnp.int32)
-                 for c in pl.clauses)
-    return _compiled(name, pl.shape)(packed, jnp.int32(num_records),
-                                     sels, invs)
+    check_key_range(mentioned, packed.shape[0])
+    return _run(packed, pl, num_records, name)
 
 
 def evaluate_dense(pred: Pred, dense: "jnp.ndarray") -> "jnp.ndarray":

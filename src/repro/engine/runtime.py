@@ -13,10 +13,18 @@ memory and powers idle cores down.  The seed simulated the energy side
   * :class:`StreamingIndexer` — incremental append of record blocks into an
     existing packed index with NO full rebuild: each block is indexed alone
     and bit-spliced onto the packed tail (a shift/carry merge when the
-    current record count is not 32-aligned).
+    current record count is not 32-aligned).  The splice runs **jitted
+    against a geometrically grown capacity buffer** with the record count
+    traced, so steady-state appends of a given block size reuse ONE trace
+    instead of re-dispatching an unjitted splice per block;
+    :meth:`StreamingIndexer.append_many` goes further and indexes a whole
+    batch of blocks in one backend dispatch, folding all the splices in a
+    single jitted ``lax.scan``.
   * :class:`MulticoreRuntime` — drives ticks of a workload stream through
     the sharded build AND integrates active/standby energy with the
-    calibrated silicon model.  The energy side is the paper-clock model
+    calibrated silicon model.  ``run_tick(queries=...)`` additionally serves
+    a batch of predicate trees against the freshly built tick index through
+    :mod:`repro.engine.batch`.  The energy side is the paper-clock model
     driven by per-tick workload counts (cores_needed), not a measurement of
     the device execution — shard_map always dispatches over every mesh
     device; calibrating joules against measured wall-clock is a ROADMAP
@@ -25,7 +33,8 @@ memory and powers idle cores down.  The seed simulated the energy side
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterable
+import functools
+from typing import Iterable, Sequence
 
 from repro import compat  # noqa: F401  (jax.shard_map / mesh shims on 0.4.x)
 
@@ -33,7 +42,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.engine import backends, policy
+from repro.engine import backends, batch as engine_batch, policy
 from repro.core.bic import BICConfig, PaperConfig
 from repro.core.elastic import ElasticScheduler, EnergyReport, PowerState
 
@@ -70,27 +79,72 @@ def multicore_create_index(records: jax.Array, keys: jax.Array,
 
 
 # -------------------------------------------------------- incremental append
+_U32 = jnp.uint32
+
+
+def _splice_impl(buf: jax.Array, num_records: jax.Array,
+                 block: jax.Array) -> jax.Array:
+    """OR a freshly indexed block (M, BW) into a packed capacity buffer at
+    bit offset ``num_records`` (traced — the offset never forces a retrace).
+
+    Caller guarantees ``num_records // 32 + BW + 1 <= buffer words`` and
+    that bits past each logical tail are zero (backend pad guarantee)."""
+    m, bw = block.shape
+    off = (num_records % policy.PACK).astype(_U32)
+    full = num_records // policy.PACK
+    hi = block << off
+    # shift amount 32 is undefined for uint32; the off == 0 carry is zero
+    # anyway, so feed the shifter a safe dummy amount there
+    safe = jnp.where(off == 0, _U32(1), _U32(policy.PACK) - off)
+    carry = jnp.where(off == 0, _U32(0), block >> safe)
+    ext = jnp.concatenate([hi, jnp.zeros((m, 1), _U32)], axis=1)
+    ext = ext.at[:, 1:].set(ext[:, 1:] | carry)
+    region = jax.lax.dynamic_slice(buf, (0, full), (m, bw + 1)) | ext
+    return jax.lax.dynamic_update_slice(buf, region, (0, full))
+
+
+_splice = jax.jit(_splice_impl)
+
+
+@functools.partial(jax.jit, static_argnames="block_records")
+def _fold_scan(buf, num_records0, blocks, block_records):
+    """Fold B uniform block splices into the capacity buffer in one trace."""
+    def body(carry, block):
+        cbuf, n = carry
+        return (_splice_impl(cbuf, n, block), n + block_records), None
+
+    carry, _ = jax.lax.scan(body, (buf, num_records0), blocks)
+    return carry
+
+
+@functools.lru_cache(maxsize=8)
+def _vmapped_create(backend_name: str):
+    """One jitted vmapped create_index per backend: a whole batch of record
+    blocks indexes in a single dispatch."""
+    be = backends.get_backend(backend_name)
+    return jax.jit(jax.vmap(be.create_index, in_axes=(0, None)))
+
+
+def splice_cache_size() -> int:
+    """Number of compiled splice traces (exposed for tests/benchmarks: a
+    steady-state append stream must NOT grow this per block)."""
+    return _splice._cache_size()
+
+
 def append_packed(packed: jax.Array, num_records: int,
                   block: jax.Array, block_records: int) -> jax.Array:
     """Bit-splice a freshly indexed ``block`` (M, ceil(n'/32)) onto a packed
     index (M, ceil(n/32)) holding ``num_records`` records.
 
     Pad bits past each logical record count must be zero (every engine
-    backend guarantees this).  O(words) shift/carry merge — no unpack.
+    backend guarantees this).  O(words) jitted shift/carry merge — no
+    unpack; the trace is cached by word-count shape only (the record count
+    enters traced).
     """
-    m, _ = packed.shape
-    off = num_records % policy.PACK
     total_words = policy.num_words(num_records + block_records)
-    if off == 0:
-        return jnp.concatenate([packed, block], axis=1)[:, :total_words]
-    full = num_records // policy.PACK
-    base, tail = packed[:, :full], packed[:, full]
-    hi = block << jnp.uint32(off)
-    carry = block >> jnp.uint32(policy.PACK - off)
-    ext = jnp.concatenate([hi, jnp.zeros((m, 1), jnp.uint32)], axis=1)
-    ext = ext.at[:, 1:].set(ext[:, 1:] | carry)
-    ext = ext.at[:, 0].set(ext[:, 0] | tail)
-    return jnp.concatenate([base, ext], axis=1)[:, :total_words]
+    slack = block.shape[1] + 1           # splice window past the tail word
+    buf = jnp.pad(packed, ((0, 0), (0, slack)))
+    return _splice(buf, jnp.int32(num_records), block)[:, :total_words]
 
 
 class StreamingIndexer:
@@ -98,33 +152,83 @@ class StreamingIndexer:
 
     ``append`` indexes only the incoming block and splices it in; the live
     index is always available via ``.index`` (bit-identical to a
-    from-scratch rebuild over all records seen so far).
+    from-scratch rebuild over all records seen so far).  The packed words
+    live in a geometrically doubled capacity buffer so the jitted splice
+    keeps one trace per block size instead of re-tracing as the index
+    grows; size ``capacity_words`` for the expected stream to avoid growth
+    retraces entirely.
     """
 
-    def __init__(self, keys: jax.Array, *, backend: str = "auto"):
+    def __init__(self, keys: jax.Array, *, backend: str = "auto",
+                 capacity_words: int = 16):
         self.keys = jnp.asarray(keys, jnp.int32)
         self.backend = backends.resolve_backend(backend)
-        self._packed = jnp.zeros((self.keys.shape[0], 0), jnp.uint32)
+        self._cap = max(int(capacity_words), 2)
+        self._buf = jnp.zeros((self.keys.shape[0], self._cap), jnp.uint32)
         self._num_records = 0
 
     @property
     def num_records(self) -> int:
         return self._num_records
 
+    def _grow(self, need_words: int) -> None:
+        if need_words > self._cap:
+            new = self._cap
+            while new < need_words:
+                new *= 2
+            self._buf = jnp.pad(self._buf, ((0, 0), (0, new - self._cap)))
+            self._cap = new
+
     def append(self, records: jax.Array) -> policy.BitmapIndex:
         """Index a (N', W) record block and splice it in; returns the
-        updated live index."""
-        n_new = records.shape[0]
+        updated live index.  An empty block is a no-op (no dispatch)."""
+        n_new = int(records.shape[0])
+        if n_new == 0:
+            return self.index
         block = backends.get_backend(self.backend).create_index(
             records, self.keys)
-        self._packed = append_packed(self._packed, self._num_records,
-                                     block, n_new)
+        self._grow(self._num_records // policy.PACK + block.shape[1] + 1)
+        self._buf = _splice(self._buf, jnp.int32(self._num_records), block)
         self._num_records += n_new
+        return self.index
+
+    def append_many(self, records: jax.Array, *, mesh: Mesh | None = None,
+                    axis: str = "data") -> policy.BitmapIndex:
+        """Append a batch of uniform blocks (B, N', W) in two dispatches:
+        one vmapped index build (sharded over ``mesh`` when given) and one
+        ``lax.scan`` that folds all B splices."""
+        b, n_blk = int(records.shape[0]), int(records.shape[1])
+        if b == 0 or n_blk == 0:
+            return self.index
+        if mesh is not None:
+            blocks = multicore_create_index(records, self.keys, mesh, axis,
+                                            backend=self.backend)
+        else:
+            blocks = _vmapped_create(self.backend)(records, self.keys)
+        total = self._num_records + b * n_blk
+        self._grow(total // policy.PACK + blocks.shape[2] + 1)
+        self._buf, _ = _fold_scan(self._buf, jnp.int32(self._num_records),
+                                  blocks, n_blk)
+        self._num_records = total
         return self.index
 
     @property
     def index(self) -> policy.BitmapIndex:
-        return policy.BitmapIndex(self._packed, self._num_records)
+        packed = self._buf[:, :policy.num_words(self._num_records)]
+        return policy.BitmapIndex(packed, self._num_records)
+
+
+def fold_block_indexes(blocks: jax.Array,
+                       block_records: int) -> policy.BitmapIndex:
+    """Fold per-block indexes (B, M, BW) of uniform ``block_records``-record
+    blocks into ONE packed index over the concatenated records (a single
+    scanned splice dispatch) — e.g. the output of
+    :func:`multicore_create_index` becoming a servable tick index."""
+    b, m, bw = blocks.shape
+    total = b * block_records
+    buf = jnp.zeros((m, total // policy.PACK + bw + 1), jnp.uint32)
+    (buf, _) = _fold_scan(buf, jnp.int32(0), blocks, block_records)
+    return policy.BitmapIndex(buf[:, :policy.num_words(total)], total)
 
 
 # ------------------------------------------------- fused execution + energy
@@ -133,6 +237,8 @@ class TickResult:
     indexes: jax.Array | None   # (B_t, M, ceil(N/32)); None on an idle tick
     active_cores: int
     report: EnergyReport
+    query_rows: jax.Array | None = None     # (Q, ceil(B_t*N/32)) uint32
+    query_counts: jax.Array | None = None   # (Q,) int32
 
 
 class MulticoreRuntime:
@@ -158,8 +264,17 @@ class MulticoreRuntime:
         self.report = EnergyReport()
 
     def run_tick(self, records: jax.Array | None, keys: jax.Array,
-                 tick_seconds: float) -> TickResult:
-        """records (B_t, N, W) for this tick (None = idle tick)."""
+                 tick_seconds: float, *,
+                 queries: Sequence | None = None) -> TickResult:
+        """records (B_t, N, W) for this tick (None = idle tick).
+
+        ``queries`` — an optional batch of predicate trees (or pre-built
+        plans) served against the index of THIS tick's records: the
+        per-core block indexes fold into one packed tick index (scanned
+        splice) and the whole batch executes through
+        :func:`repro.engine.batch.execute_many` in a few bucketed
+        dispatches.  Results land in ``TickResult.query_rows/query_counts``
+        in query order."""
         wl = 0 if records is None else records.shape[0]
         tick = self.scheduler.run([wl], tick_seconds)
         self.report.merge(tick)
@@ -168,7 +283,13 @@ class MulticoreRuntime:
         out = multicore_create_index(records, keys, self.mesh, self.axis,
                                      backend=self.backend)
         z = self.scheduler.cores_needed(wl, tick_seconds)
-        return TickResult(out, z, tick)
+        qrows = qcounts = None
+        if queries is not None and len(queries):
+            idx = fold_block_indexes(out, records.shape[1])
+            qrows, qcounts = engine_batch.execute_many(
+                idx.packed, queries, num_records=idx.num_records,
+                backend=self.backend)
+        return TickResult(out, z, tick, qrows, qcounts)
 
     def index_stream(self, ticks: Iterable[jax.Array | None],
                      keys: jax.Array, tick_seconds: float

@@ -1,5 +1,7 @@
 """Serving steps: batched prefill (returns last-position logits + a KV/state
-cache padded to the decode horizon) and single-token decode."""
+cache padded to the decode horizon), single-token decode, and batched
+structured retrieval over a bitmap index (the paper's query workload served
+through the engine's bucketed batch executor)."""
 from __future__ import annotations
 
 import functools
@@ -7,6 +9,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.engine import batch as _engine_batch
 from repro.models.config import ModelConfig
 from repro.models.model import model_forward
 
@@ -29,6 +32,24 @@ def make_decode_step(cfg: ModelConfig):
             params, cfg, batch["tokens"], cache=batch["cache"], mode="decode")
         return logits, cache
     return decode_step
+
+
+def make_bitmap_query_step(index, *, backend: str = "auto"):
+    """Batched structured-retrieval step over a
+    :class:`repro.engine.policy.BitmapIndex`: the returned
+    ``query_step(predicates)`` serves many predicate trees per dispatch
+    (plan-shape bucketing in ``repro.engine.batch``) and yields
+    (rows (Q, Nw) uint32, counts (Q,) int32) in request order — the
+    serving-path analogue of ``make_prefill_step`` for the paper's query
+    workload."""
+    packed, num_records = index.packed, index.num_records
+
+    def query_step(predicates):
+        return _engine_batch.execute_many(packed, predicates,
+                                          num_records=num_records,
+                                          backend=backend)
+
+    return query_step
 
 
 def greedy_generate(params, cfg: ModelConfig, tokens, steps: int,

@@ -8,8 +8,10 @@ from __future__ import annotations
 import json
 import sys
 
-REQUIRED = ("engine_planner_query_batched", "engine_streaming_append")
-EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact", "allclose")
+REQUIRED = ("engine_planner_query_batched", "engine_streaming_append",
+            "store_spill_recover")
+EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact_recover", "bitexact",
+                   "allclose")
 
 
 def main(path: str = "BENCH_engine.json") -> int:

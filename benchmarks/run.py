@@ -22,6 +22,11 @@ gate on the bit-exactness flags (see benchmarks/check.py).
                              vs a from-scratch rebuild of the same records;
                              reports jitted-splice retrace behaviour and the
                              scanned append_many path
+  store_spill_recover      — durable segment store: WAL-logged streaming
+                             appends with periodic segment spills, simulated
+                             crash, manifest+WAL recovery (bit-exact vs the
+                             never-spilled index), and segment-parallel
+                             query serving vs one resident buffer
   kernel_*            — Pallas kernels (interpret mode) vs oracle timings
   elastic_energy      — multi-core elastic standby-power policy (Fig. 4)
   tpu_projection      — v5e roofline projection of indexing throughput
@@ -275,6 +280,78 @@ def engine_streaming_append():
         f"bitexact_vs_rebuild={ok}")
 
 
+def store_spill_recover():
+    """The restart scenario end to end: stream 8x512-record blocks through
+    a store-attached StreamingIndexer (WAL append before every splice,
+    segment spill every 3 blocks), "crash", recover from manifest + WAL,
+    and serve a query batch segment-parallel — gating on bit-exactness of
+    both the recovered index and the segment-parallel results."""
+    import shutil
+    import tempfile
+
+    from repro.store import SegmentStore, open_index
+    from repro.engine import policy as engine_policy
+
+    m, w, block, nblocks = 64, 16, 512, 8
+    rng = np.random.default_rng(11)
+    keys = jnp.asarray(rng.integers(0, 256, (m,), dtype=np.int32))
+    blocks = [jnp.asarray(rng.integers(0, 256, (block, w), dtype=np.int32))
+              for _ in range(nblocks)]
+    root = tempfile.mkdtemp(prefix="bic-store-bench-")
+    try:
+        def stream(dirname):
+            si = StreamingIndexer(keys, backend="ref")
+            si.attach_store(SegmentStore(os.path.join(root, dirname)),
+                            flush_records=3 * block)   # leaves a WAL tail
+            for b in blocks:
+                si.append(b)
+            return si
+
+        stream("warmup")          # compile create_index + splice traces
+        t0 = time.perf_counter()
+        si = stream("idx")
+        spill_us = (time.perf_counter() - t0) * 1e6
+        want = engine_backends.get_backend("ref").create_index(
+            jnp.concatenate(blocks, axis=0), keys)
+
+        t0 = time.perf_counter()
+        store = SegmentStore(os.path.join(root, "idx"))   # fresh process'
+        rec = StreamingIndexer.restore(store, keys, backend="ref")
+        jax.block_until_ready(rec.index.packed)
+        recover_us = (time.perf_counter() - t0) * 1e6
+        ok_rec = (bool(jnp.all(rec.index.packed == want))
+                  and rec.num_records == nblocks * block)
+
+        n = rec.num_records
+        tail_n = n - store.durable_records
+        tail = (engine_policy.extract_packed(
+            rec.index.packed, store.durable_records, tail_n), tail_n)
+        stored = open_index(store, tail=tail if tail_n else None)
+        preds = _mixed_predicates(m, 200, 12)
+
+        def serve_seg():
+            return stored.query_many(preds, backend="ref")
+
+        def serve_mem():
+            return engine_batch.execute_many(want, preds, num_records=n,
+                                             backend="ref")
+
+        us_seg = timeit(serve_seg, reps=3, warmup=1)
+        us_mem = timeit(serve_mem, reps=3, warmup=1)
+        rs, cs = serve_seg()
+        rm, cm = serve_mem()
+        ok_q = bool(jnp.all(rs == rm)) and bool(jnp.all(cs == cm))
+        wal_blocks = len(store.replay_wal())
+        mb = nblocks * block * w / 1e6
+        row("store_spill_recover", spill_us,
+            f"spill_MB/s={mb / (spill_us/1e6):.1f} recover_us={recover_us:.0f} "
+            f"segments={len(store.segments)} wal_tail_blocks={wal_blocks} "
+            f"serve_seg_us={us_seg:.0f} serve_mem_us={us_mem:.0f} "
+            f"bitexact_recover={ok_rec} bitexact={ok_q}")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
 # ------------------------------------------------------ kernel microbenches
 def kernel_cam_match():
     rng = np.random.default_rng(2)
@@ -336,6 +413,7 @@ def tpu_projection():
 ALL = [fig6_freq_power, fig7_energy, fig8_leakage, table1_spb,
        bic_create_cpu, bic_query_cpu, engine_planner_query,
        engine_planner_query_batched, engine_streaming_append,
+       store_spill_recover,
        kernel_cam_match, kernel_bit_transpose, kernel_bitmap_query,
        elastic_energy, tpu_projection]
 

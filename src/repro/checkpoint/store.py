@@ -1,8 +1,13 @@
 """Checkpointing + restart: the fault-tolerance substrate.
 
 Design (single-host file backend standing in for a distributed blob store):
-  * Atomic writes — tmp dir + rename, so a crash mid-save never corrupts
-    the latest checkpoint (restart always finds a complete step).
+  * Serialization rides on :mod:`repro.store.format` — the same versioned,
+    CRC-checksummed array-file container the bitmap segment store uses —
+    so a torn or bit-flipped checkpoint raises ``CorruptFileError`` on
+    restore instead of silently resuming from garbage.
+  * Atomic writes — array files replace atomically and the step directory
+    lands via tmp dir + rename, so a crash mid-save never corrupts the
+    latest checkpoint (restart always finds a complete step).
   * The full training state is captured: params, optimizer moments, step,
     data-sampler state — restart is bit-deterministic.
   * ``CheckpointManager`` adds retention, periodic cadence, and a
@@ -14,7 +19,6 @@ Design (single-host file backend standing in for a distributed blob store):
 """
 from __future__ import annotations
 
-import json
 import os
 import shutil
 import threading
@@ -22,6 +26,8 @@ from typing import Any
 
 import jax
 import numpy as np
+
+from repro.store import format as fmt
 
 
 def _flatten(tree: Any, prefix: str = "") -> dict[str, np.ndarray]:
@@ -48,20 +54,25 @@ def _unflatten_into(tree: Any, flat: dict[str, np.ndarray], prefix: str = ""):
     return flat[prefix[:-1]]
 
 
-def save_checkpoint(ckpt_dir: str, step: int, state: dict) -> str:
-    """Atomic: write to <dir>/tmp-<step>, fsync, rename to <dir>/step-<step>."""
-    os.makedirs(ckpt_dir, exist_ok=True)
+def _write_step_dir(ckpt_dir: str, step: int, flat: dict) -> str:
+    """The shared write path: checksummed array file (store substrate)
+    inside a tmp dir, then an atomic dir rename."""
     tmp = os.path.join(ckpt_dir, f"tmp-{step}")
     final = os.path.join(ckpt_dir, f"step-{step:08d}")
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    flat = _flatten(state)
-    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
-    with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, "keys": sorted(flat)}, f)
+    fmt.write_array_file(os.path.join(tmp, "arrays.bin"), flat,
+                         meta={"step": step, "keys": sorted(flat)})
     os.replace(tmp, final)
+    fmt.fsync_dir(ckpt_dir)
     return final
+
+
+def save_checkpoint(ckpt_dir: str, step: int, state: dict) -> str:
+    """Atomic: write to <dir>/tmp-<step>, fsync, rename to <dir>/step-<step>."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    return _write_step_dir(ckpt_dir, step, _flatten(state))
 
 
 def latest_step(ckpt_dir: str) -> int | None:
@@ -80,8 +91,7 @@ def restore_checkpoint(ckpt_dir: str, state_like: dict,
     if step is None:
         raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
     path = os.path.join(ckpt_dir, f"step-{step:08d}")
-    with np.load(os.path.join(path, "arrays.npz")) as z:
-        flat = {k: z[k] for k in z.files}
+    flat, _ = fmt.read_array_file(os.path.join(path, "arrays.bin"))
     return _unflatten_into(state_like, flat), step
 
 
@@ -105,13 +115,7 @@ class CheckpointManager:
         snapshot = _flatten(state)        # device -> host before returning
 
         def _write():
-            tmp = os.path.join(self.ckpt_dir, f"tmp-{step}")
-            final = os.path.join(self.ckpt_dir, f"step-{step:08d}")
-            os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "arrays.npz"), **snapshot)
-            with open(os.path.join(tmp, "meta.json"), "w") as f:
-                json.dump({"step": step, "keys": sorted(snapshot)}, f)
-            os.replace(tmp, final)
+            _write_step_dir(self.ckpt_dir, step, snapshot)
             self._gc()
 
         if self.async_save:

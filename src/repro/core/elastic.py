@@ -107,19 +107,48 @@ class ElasticScheduler:
         cap_per_core = max(1, int(tick_seconds / self.batch_seconds))
         return min(self.num_cores, math.ceil(workload / cap_per_core))
 
+    def calibrate(self, measured_mbps_per_core: float) -> None:
+        """Re-derive the per-core batch time from a *measured* per-core
+        indexing throughput, so ``cores_needed`` and the busy-time model
+        track the device actually executing instead of the paper clock.
+        MB/s is in PAPER units — one 8-bit record word per byte, the same
+        accounting as ``cycles_per_batch`` and ``TickResult.measured_mbps``
+        — so both sides of the division stay consistent.  Ignores
+        non-positive measurements."""
+        if measured_mbps_per_core <= 0:
+            return
+        batch_bytes = self.cfg.num_records * self.cfg.words_per_record
+        self.batch_seconds = batch_bytes / (measured_mbps_per_core * 1e6)
+
+    def account(self, workload: int, tick_seconds: float, *,
+                busy_seconds: float | None = None) -> EnergyReport:
+        """Energy for ONE tick of ``workload`` batches.  By default the
+        busy time comes from the model (workload count x per-core batch
+        time); pass ``busy_seconds`` to charge active energy over a
+        measured dispatch wall-clock instead."""
+        rep = EnergyReport()
+        z = self.cores_needed(workload, tick_seconds) if workload else 0
+        if z:
+            model_busy = min(tick_seconds,
+                             (workload / max(z, 1)) * self.batch_seconds)
+            busy = (model_busy if busy_seconds is None
+                    else min(tick_seconds, busy_seconds))
+        else:
+            busy = 0.0
+        rep.active_joules += z * self.p_active * busy
+        # active cores idle-standby for the remainder of the tick too
+        rep.standby_joules += (
+            z * self.p_standby * (tick_seconds - busy)
+            + (self.num_cores - z) * self.p_standby * tick_seconds)
+        rep.busy_core_seconds += z * busy
+        rep.idle_core_seconds += self.num_cores * tick_seconds - z * busy
+        rep.batches += workload
+        return rep
+
     def run(self, workloads: Sequence[int], tick_seconds: float) -> EnergyReport:
         rep = EnergyReport()
         for wl in workloads:
-            z = self.cores_needed(wl, tick_seconds) if wl else 0
-            busy = min(tick_seconds, (wl / max(z, 1)) * self.batch_seconds) if z else 0.0
-            rep.active_joules += z * self.p_active * busy
-            # active cores idle-standby for the remainder of the tick too
-            rep.standby_joules += (
-                z * self.p_standby * (tick_seconds - busy)
-                + (self.num_cores - z) * self.p_standby * tick_seconds)
-            rep.busy_core_seconds += z * busy
-            rep.idle_core_seconds += self.num_cores * tick_seconds - z * busy
-            rep.batches += wl
+            rep.merge(self.account(wl, tick_seconds))
         return rep
 
 

@@ -16,6 +16,7 @@ deterministic restart (the sampler state is part of the checkpoint).
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Iterator, Sequence
 
 import jax
@@ -23,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bic import BICCore, BICConfig, BitmapIndex
-from repro.engine.planner import Pred
+from repro.engine.planner import Pred, from_include_exclude
 
 ATTR_WORDS = 8        # attribute words per document "record"
 
@@ -67,22 +68,59 @@ class SyntheticCorpus:
 
 
 class BitmapIndexedDataset:
-    """Corpus shards + per-shard bitmap indexes + query-driven batching."""
+    """Corpus shards + per-shard bitmap indexes + query-driven batching.
 
-    def __init__(self, cfg: DataConfig, bic: BICCore | None = None):
+    ``store_dir`` makes the per-shard indexes durable: each shard's packed
+    index persists as a :class:`repro.store.SegmentStore` segment under
+    ``<store_dir>/shard-<id>``, so a restarted pipeline reloads
+    (CRC-verified) instead of re-running the BIC build over the corpus."""
+
+    def __init__(self, cfg: DataConfig, bic: BICCore | None = None, *,
+                 store_dir: str | None = None):
         self.cfg = cfg
         self.corpus = SyntheticCorpus(cfg)
         self.bic = bic or BICCore(BICConfig(
             num_keys=cfg.num_attributes,
             num_records=cfg.docs_per_shard,
             words_per_record=ATTR_WORDS))
+        self.store_dir = store_dir
         self._shards: dict[int, tuple[np.ndarray, BitmapIndex]] = {}
+
+    def _load_or_index(self, attrs: np.ndarray,
+                       keys: jax.Array, shard_id: int) -> BitmapIndex:
+        if self.store_dir is None:
+            return self.bic.create(jnp.asarray(attrs), keys)
+        from repro.store import SegmentStore
+        st = SegmentStore(os.path.join(self.store_dir,
+                                       f"shard-{shard_id:04d}"))
+        try:
+            if st.durable_records == self.cfg.docs_per_shard:
+                if st.num_keys != self.cfg.num_attributes:
+                    raise ValueError(
+                        f"store shard-{shard_id:04d} holds "
+                        f"{st.num_keys}-key segments but the config says "
+                        f"{self.cfg.num_attributes} attributes — stale "
+                        "store_dir?")
+                packed, n = st.load_packed()
+                return BitmapIndex(jnp.asarray(packed), n)
+            if st.durable_records:
+                raise ValueError(
+                    f"store shard-{shard_id:04d} holds "
+                    f"{st.durable_records} records but the config says "
+                    f"{self.cfg.docs_per_shard} — stale store_dir?")
+            index = self.bic.create(jnp.asarray(attrs), keys)
+            st.ensure_keys(np.asarray(jax.device_get(keys)))
+            st.write_segment(np.asarray(jax.device_get(index.packed)),
+                             index.num_records, 0)
+            return index
+        finally:
+            st.close()
 
     def _ensure_shard(self, shard_id: int):
         if shard_id not in self._shards:
             tokens, attrs = self.corpus.shard(shard_id)
             keys = jnp.arange(self.cfg.num_attributes, dtype=jnp.int32)
-            index = self.bic.create(jnp.asarray(attrs), keys)
+            index = self._load_or_index(attrs, keys, shard_id)
             self._shards[shard_id] = (tokens, index)
         return self._shards[shard_id]
 
@@ -96,13 +134,29 @@ class BitmapIndexedDataset:
         ``where=(key(0) | key(1)) & key(18) & ~key(30)`` for
         "(domain 0 or domain 1) and quality bucket 2 and not tag 30" — the
         engine planner fuses it into minimal bitmap passes."""
+        if where is None:
+            where = from_include_exclude(include, exclude)
+        elif include or exclude:
+            raise ValueError("pass either include/exclude or where=, "
+                             "not both")
+        return self.select_many(shard_id, [where])[0]
+
+    def select_many(self, shard_id: int,
+                    wheres: Sequence[Pred]) -> list[np.ndarray]:
+        """Serve a burst of predicate selections against one shard in a
+        handful of bucketed dispatches (``engine.batch`` plan-shape
+        bucketing) instead of one planner dispatch per predicate — the
+        data-plane twin of ``BICCore.query_many``.  Returns the matching
+        document-id array per predicate, in input order."""
         tokens, index = self._ensure_shard(shard_id)
-        row, _ = self.bic.query(index, include=include, exclude=exclude,
-                                where=where)
-        bits = np.asarray(jax.device_get(row))
-        ids = np.flatnonzero(
-            np.unpackbits(bits.view(np.uint8), bitorder="little"))
-        return ids[ids < tokens.shape[0]]
+        rows, _ = self.bic.query_many(index, list(wheres))
+        bits = np.asarray(jax.device_get(rows))
+        out = []
+        for qi in range(bits.shape[0]):
+            ids = np.flatnonzero(
+                np.unpackbits(bits[qi].view(np.uint8), bitorder="little"))
+            out.append(ids[ids < tokens.shape[0]])
+        return out
 
     def batches(self, batch_size: int, include: Sequence[int] = (),
                 exclude: Sequence[int] = (), *, where: Pred | None = None,

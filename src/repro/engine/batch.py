@@ -28,6 +28,14 @@ batches of passes).  This module restructures the serving path:
 Composite plans (the DNF size-guard fallback) and contradictions are served
 out-of-band — composites through ``planner.execute``, contradictions as
 constant zeros — and spliced back into input order.
+
+:func:`execute_many_segments` extends the same machinery to indexes that
+live as a chain of packed **segments** over disjoint record ranges (the
+durable layout of :mod:`repro.store`): plans lower and bucket ONCE, the
+bucketed dispatch runs per segment (identical word counts reuse one
+compiled executor), and the per-segment result rows OR-splice together at
+their record offsets — so an index larger than any single resident buffer
+is servable without materializing it.
 """
 from __future__ import annotations
 
@@ -149,24 +157,10 @@ def _bucket_arrays(progs: Sequence[PassProgram], shape: tuple[int, int, int],
     return sels, invs, post
 
 
-def execute_many(packed: jax.Array,
-                 predicates: Sequence[Union[planner.Pred, planner.QueryPlan,
-                                            planner.FactoredPlan,
-                                            planner.CompositePlan]], *,
-                 num_records: int, backend: str = "auto",
-                 max_clauses: int | None = planner.DEFAULT_MAX_CLAUSES,
-                 factor: bool = False
-                 ) -> tuple[jax.Array, jax.Array]:
-    """Serve a batch of predicate trees (or pre-built plans) over one packed
-    (M, Nw) index in a handful of vmapped dispatches.
-
-    Returns (rows (Q, Nw) uint32, counts (Q,) int32) in input order, each
-    row tail-masked past ``num_records`` — bit-identical to a sequential
-    loop of :func:`planner.execute`.  ``factor=True`` additionally runs
-    common-clause factoring on each DNF plan before lowering.
-    """
-    name = backends.resolve_backend(backend)
-    m, nw = packed.shape
+def _to_plans(predicates: Sequence, m: int,
+              max_clauses: int | None, factor: bool) -> list:
+    """Plan every predicate (validating raw trees against ``m`` key rows)
+    and optionally factor the DNF plans."""
     plans = []
     for pred in predicates:
         if isinstance(pred, (planner.QueryPlan, planner.FactoredPlan,
@@ -180,11 +174,16 @@ def execute_many(packed: jax.Array,
         if factor and isinstance(pl, planner.QueryPlan) and pl.clauses:
             pl = planner.factor(pl)
         plans.append(pl)
+    return plans
 
-    q = len(plans)
-    if q == 0:
-        return (jnp.zeros((0, nw), jnp.uint32), jnp.zeros((0,), jnp.int32))
 
+def _partition(plans: Sequence, m: int):
+    """Bucket lowered plans by canonical shape and pack the per-bucket
+    selector arrays ONCE — reusable across every packed buffer the batch
+    is served against (the whole index, or each segment of a chain).
+
+    Returns (bucket list [(shape, idxs, sels, invs, post)], zero-result
+    query indexes, composite-fallback query indexes)."""
     buckets: dict[tuple[int, int, int], tuple[list, list]] = {}
     composite: list[int] = []
     zeros: list[int] = []
@@ -201,7 +200,21 @@ def execute_many(packed: jax.Array,
         idxs, progs = buckets.setdefault(shape, ([], []))
         idxs.append(qi)
         progs.append(prog)
+    packed_buckets = []
+    for shape, (idxs, progs) in buckets.items():
+        sels, invs, post = _bucket_arrays(progs, shape, ones_idx=m)
+        packed_buckets.append((shape, idxs, jnp.asarray(sels),
+                               jnp.asarray(invs), jnp.asarray(post)))
+    return packed_buckets, zeros, composite
 
+
+def _serve(packed: jax.Array, num_records: int, plans: Sequence,
+           part, name: str) -> tuple[jax.Array, jax.Array]:
+    """Run a pre-partitioned batch against ONE packed buffer; results come
+    back in input order."""
+    m, nw = packed.shape
+    buckets, zeros, composite = part
+    q = len(plans)
     # One result piece per bucket (plus zeros / composite fallbacks), then a
     # single permutation gather back into input order — no per-bucket
     # scatter over the (Q, Nw) output.
@@ -212,11 +225,8 @@ def execute_many(packed: jax.Array,
         aug = jnp.concatenate(
             [packed, jnp.full((1, nw), 0xFFFFFFFF, dtype=jnp.uint32)], axis=0)
         nrec = jnp.int32(num_records)
-        for shape, (idxs, progs) in buckets.items():
-            sels, invs, post = _bucket_arrays(progs, shape, ones_idx=m)
-            rws, cts = _executor(name, *shape)(
-                aug, nrec, jnp.asarray(sels), jnp.asarray(invs),
-                jnp.asarray(post))
+        for shape, idxs, sels, invs, post in buckets:
+            rws, cts = _executor(name, *shape)(aug, nrec, sels, invs, post)
             pieces_r.append(rws)
             pieces_c.append(cts)
             order.extend(idxs)
@@ -240,3 +250,79 @@ def execute_many(packed: jax.Array,
     inv[np.asarray(order, np.int32)] = np.arange(q, dtype=np.int32)
     inv = jnp.asarray(inv)
     return rows_all[inv], counts_all[inv]
+
+
+def execute_many(packed: jax.Array,
+                 predicates: Sequence[Union[planner.Pred, planner.QueryPlan,
+                                            planner.FactoredPlan,
+                                            planner.CompositePlan]], *,
+                 num_records: int, backend: str = "auto",
+                 max_clauses: int | None = planner.DEFAULT_MAX_CLAUSES,
+                 factor: bool = False
+                 ) -> tuple[jax.Array, jax.Array]:
+    """Serve a batch of predicate trees (or pre-built plans) over one packed
+    (M, Nw) index in a handful of vmapped dispatches.
+
+    Returns (rows (Q, Nw) uint32, counts (Q,) int32) in input order, each
+    row tail-masked past ``num_records`` — bit-identical to a sequential
+    loop of :func:`planner.execute`.  ``factor=True`` additionally runs
+    common-clause factoring on each DNF plan before lowering.
+    """
+    name = backends.resolve_backend(backend)
+    m, nw = packed.shape
+    plans = _to_plans(predicates, m, max_clauses, factor)
+    if not plans:
+        return (jnp.zeros((0, nw), jnp.uint32), jnp.zeros((0,), jnp.int32))
+    return _serve(packed, num_records, plans, _partition(plans, m), name)
+
+
+_seg_splice = jax.jit(policy.splice_packed)
+
+
+def execute_many_segments(parts: Sequence[tuple[jax.Array, int]],
+                          predicates: Sequence, *, backend: str = "auto",
+                          max_clauses: int | None =
+                          planner.DEFAULT_MAX_CLAUSES,
+                          factor: bool = False
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Serve a query batch over an index stored as a chain of packed
+    segments covering contiguous record ranges — the durable layout of
+    :mod:`repro.store` — without materializing one contiguous buffer.
+
+    ``parts``: ordered ``(packed (M, ceil(n_i/32)) uint32, n_i)`` pairs;
+    record ``sum(n_(<i))`` is the absolute offset of segment i.  Plans
+    lower, validate, and bucket ONCE; each segment then runs the bucketed
+    dispatch (segments with equal word counts share the same compiled
+    executors) and its result rows — tail-masked within the segment — are
+    OR-spliced into the global (Q, ceil(N/32)) rows at the segment's bit
+    offset.  Counts sum per segment.  Bit-identical to
+    :func:`execute_many` over the spliced-together index.
+    """
+    name = backends.resolve_backend(backend)
+    parts = [(p, int(n)) for p, n in parts]
+    if not parts:
+        # an empty index has no key count to validate against; every
+        # query matches nothing by definition
+        q = len(predicates)
+        return (jnp.zeros((q, 0), jnp.uint32), jnp.zeros((q,), jnp.int32))
+    total = sum(n for _, n in parts)
+    tw = policy.num_words(total)
+    m = parts[0][0].shape[0]
+    if any(p.shape[0] != m for p, _ in parts):
+        raise ValueError("segments disagree on key count: "
+                         f"{[p.shape[0] for p, _ in parts]}")
+    plans = _to_plans(predicates, m, max_clauses, factor)
+    q = len(plans)
+    if q == 0:
+        return (jnp.zeros((q, tw), jnp.uint32), jnp.zeros((q,), jnp.int32))
+    part = _partition(plans, m)
+    max_bw = max(p.shape[1] for p, _ in parts)
+    rows = jnp.zeros((q, tw + max_bw + 1), jnp.uint32)
+    counts = jnp.zeros((q,), jnp.int32)
+    start = 0
+    for packed, n in parts:
+        r_i, c_i = _serve(jnp.asarray(packed), n, plans, part, name)
+        rows = _seg_splice(rows, jnp.int32(start), r_i)
+        counts = counts + c_i
+        start += n
+    return rows[:, :tw], counts

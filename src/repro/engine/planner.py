@@ -130,8 +130,12 @@ def _simplify(clauses: Iterable[Clause]) -> list[tuple[Literal, ...]]:
     # absorption: a clause subsumed by a subset clause contributes nothing
     kept = [c for c in sat
             if not any(o < c for o in sat)]
-    # deterministic ordering for stable plan shapes / cache keys
-    return sorted(tuple(sorted(c)) for c in set(kept))
+    # deterministic cheapest-first ordering (fewest literals first, then
+    # lexicographic): stable plan shapes / cache keys, and a short-circuit
+    # executor can try the cheapest pass first — the clause order never
+    # changes the OR-of-clauses result
+    return sorted((tuple(sorted(c)) for c in set(kept)),
+                  key=lambda c: (len(c), c))
 
 
 @dataclasses.dataclass(frozen=True)

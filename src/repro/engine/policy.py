@@ -42,6 +42,53 @@ def mask_tail(result: jax.Array, num_records: int | jax.Array
     return masked, count
 
 
+def splice_packed(buf: jax.Array, bit_offset: jax.Array,
+                  block: jax.Array) -> jax.Array:
+    """OR packed ``block`` rows (M, BW) into a packed capacity buffer
+    (M, W) at ``bit_offset`` (traced — the offset never forces a retrace).
+
+    The shift/carry merge every splicing path shares: the streaming
+    indexer's append, the scanned block fold, and the segment-parallel
+    OR-fold of per-segment query result rows.  Caller guarantees
+    ``bit_offset // 32 + BW + 1 <= W`` and that bits past each logical
+    tail are zero (backend pad / tail-mask guarantee)."""
+    m, bw = block.shape
+    off = (bit_offset % PACK).astype(jnp.uint32)
+    full = bit_offset // PACK
+    hi = block << off
+    # shift amount 32 is undefined for uint32; the off == 0 carry is zero
+    # anyway, so feed the shifter a safe dummy amount there
+    safe = jnp.where(off == 0, jnp.uint32(1), jnp.uint32(PACK) - off)
+    carry = jnp.where(off == 0, jnp.uint32(0), block >> safe)
+    ext = jnp.concatenate([hi, jnp.zeros((m, 1), jnp.uint32)], axis=1)
+    ext = ext.at[:, 1:].set(ext[:, 1:] | carry)
+    region = jax.lax.dynamic_slice(buf, (0, full), (m, bw + 1)) | ext
+    return jax.lax.dynamic_update_slice(buf, region, (0, full))
+
+
+def extract_packed(packed: jax.Array, start: int, count: int) -> jax.Array:
+    """Copy packed bit columns ``[start, start + count)`` out of (M, W)
+    packed rows into a fresh ``(M, ceil(count/32))`` packed array with
+    zeroed tail bits — the inverse of :func:`splice_packed`, used to slice
+    a flushable tail out of a live index at an arbitrary (unaligned)
+    offset.  ``start``/``count`` are host ints (spill is an I/O path)."""
+    m, w = packed.shape
+    nw = num_words(count)
+    off = start % PACK
+    w0 = start // PACK
+    need = w0 + nw + (1 if off else 0)
+    if need > w:
+        packed = jnp.pad(packed, ((0, 0), (0, need - w)))
+    if off:
+        lo = packed[:, w0:w0 + nw] >> jnp.uint32(off)
+        hi = packed[:, w0 + 1:w0 + 1 + nw] << jnp.uint32(PACK - off)
+        out = lo | hi
+    else:
+        out = packed[:, w0:w0 + nw]
+    valid = (jnp.arange(nw * PACK, dtype=jnp.uint32) < count)
+    return out & ref.pack_bits(valid)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class BitmapIndex:

@@ -24,22 +24,36 @@ memory and powers idle cores down.  The seed simulated the energy side
     the sharded build AND integrates active/standby energy with the
     calibrated silicon model.  ``run_tick(queries=...)`` additionally serves
     a batch of predicate trees against the freshly built tick index through
-    :mod:`repro.engine.batch`.  The energy side is the paper-clock model
-    driven by per-tick workload counts (cores_needed), not a measurement of
-    the device execution — shard_map always dispatches over every mesh
-    device; calibrating joules against measured wall-clock is a ROADMAP
-    follow-up.
+    :mod:`repro.engine.batch`.  Every tick's dispatch is wall-clock
+    measured and folded into a throughput EWMA; with
+    ``calibrate_energy=True`` the elastic model charges active energy over
+    the *measured* busy time and re-derives its per-core batch time from
+    the measured MB/s — joules track the actual device, not only the paper
+    clock.  With ``store_dir=...`` the runtime additionally maintains one
+    durable per-core index (``repro.store.SegmentStore`` per core):
+    per-batch block indexes splice into per-core streaming indexers, spill
+    to segments at the flush threshold, and a restarted runtime recovers
+    them bit-identically from manifest + WAL.
+  * ``StreamingIndexer.attach_store`` / ``spill`` / ``restore`` — the
+    durability hooks: raw blocks are WAL-logged *before* the in-memory
+    splice, the tail past the durable prefix flushes as an immutable
+    segment (extracted at its unaligned offset by
+    :func:`repro.engine.policy.extract_packed`), and recovery replays
+    committed segments + surviving WAL blocks into a bit-identical index.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import os
+import time
 from typing import Iterable, Sequence
 
 from repro import compat  # noqa: F401  (jax.shard_map / mesh shims on 0.4.x)
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.engine import backends, batch as engine_batch, policy
@@ -82,28 +96,10 @@ def multicore_create_index(records: jax.Array, keys: jax.Array,
 _U32 = jnp.uint32
 
 
-def _splice_impl(buf: jax.Array, num_records: jax.Array,
-                 block: jax.Array) -> jax.Array:
-    """OR a freshly indexed block (M, BW) into a packed capacity buffer at
-    bit offset ``num_records`` (traced — the offset never forces a retrace).
-
-    Caller guarantees ``num_records // 32 + BW + 1 <= buffer words`` and
-    that bits past each logical tail are zero (backend pad guarantee)."""
-    m, bw = block.shape
-    off = (num_records % policy.PACK).astype(_U32)
-    full = num_records // policy.PACK
-    hi = block << off
-    # shift amount 32 is undefined for uint32; the off == 0 carry is zero
-    # anyway, so feed the shifter a safe dummy amount there
-    safe = jnp.where(off == 0, _U32(1), _U32(policy.PACK) - off)
-    carry = jnp.where(off == 0, _U32(0), block >> safe)
-    ext = jnp.concatenate([hi, jnp.zeros((m, 1), _U32)], axis=1)
-    ext = ext.at[:, 1:].set(ext[:, 1:] | carry)
-    region = jax.lax.dynamic_slice(buf, (0, full), (m, bw + 1)) | ext
-    return jax.lax.dynamic_update_slice(buf, region, (0, full))
-
-
-_splice = jax.jit(_splice_impl)
+# The shift/carry merge itself lives in :func:`repro.engine.policy
+# .splice_packed` (shared with the segment-parallel OR-fold in
+# ``engine.batch``); this module owns the jitted entry points.
+_splice = jax.jit(policy.splice_packed)
 
 
 @functools.partial(jax.jit, static_argnames="block_records")
@@ -111,7 +107,7 @@ def _fold_scan(buf, num_records0, blocks, block_records):
     """Fold B uniform block splices into the capacity buffer in one trace."""
     def body(carry, block):
         cbuf, n = carry
-        return (_splice_impl(cbuf, n, block), n + block_records), None
+        return (policy.splice_packed(cbuf, n, block), n + block_records), None
 
     carry, _ = jax.lax.scan(body, (buf, num_records0), blocks)
     return carry
@@ -157,6 +153,13 @@ class StreamingIndexer:
     keeps one trace per block size instead of re-tracing as the index
     grows; size ``capacity_words`` for the expected stream to avoid growth
     retraces entirely.
+
+    With a :class:`repro.store.SegmentStore` attached the index outlives
+    the process: every incoming block is WAL-logged *before* the in-memory
+    splice, the tail past the store's durable prefix flushes as an
+    immutable segment once ``flush_records`` accumulate (or on an explicit
+    :meth:`spill`), and :meth:`restore` rebuilds a bit-identical live
+    indexer from manifest + WAL after a crash.
     """
 
     def __init__(self, keys: jax.Array, *, backend: str = "auto",
@@ -166,10 +169,42 @@ class StreamingIndexer:
         self._cap = max(int(capacity_words), 2)
         self._buf = jnp.zeros((self.keys.shape[0], self._cap), jnp.uint32)
         self._num_records = 0
+        self._store = None
+        self._flush_records: int | None = None
+        self._last_tick = -1
+        self._last_tick_blocks = 0
 
     @property
     def num_records(self) -> int:
         return self._num_records
+
+    @property
+    def store(self):
+        return self._store
+
+    @property
+    def last_tick(self) -> int:
+        """Highest ``tick`` stamp this index has absorbed (-1 when ticks
+        are untracked).  Survives spill/crash/restore."""
+        return self._last_tick
+
+    def absorbed_blocks(self, tick: int) -> int:
+        """How many blocks of (monotone) workload tick ``tick`` this index
+        has already absorbed — the replay-idempotence watermark a driver
+        uses to skip the already-applied prefix of an in-flight tick.
+        Returns -1 when ``tick`` is below the watermark entirely (every
+        block of it was absorbed before a later tick started)."""
+        if tick == self._last_tick:
+            return self._last_tick_blocks
+        return 0 if tick > self._last_tick else -1
+
+    def _stamp_tick(self, tick: int | None) -> None:
+        if tick is None:
+            return
+        if tick > self._last_tick:
+            self._last_tick, self._last_tick_blocks = tick, 1
+        elif tick == self._last_tick:
+            self._last_tick_blocks += 1
 
     def _grow(self, need_words: int) -> None:
         if need_words > self._cap:
@@ -179,6 +214,95 @@ class StreamingIndexer:
             self._buf = jnp.pad(self._buf, ((0, 0), (0, new - self._cap)))
             self._cap = new
 
+    # ----------------------------------------------------------- durability
+    def attach_store(self, store, *, flush_records: int | None = 4096
+                     ) -> None:
+        """Make this index durable: WAL-log every future append into
+        ``store`` and auto-:meth:`spill` a segment whenever the in-memory
+        tail reaches ``flush_records`` records (None = manual spills only).
+
+        The store must not be ahead of the indexer — to resume from a
+        non-empty store, use :meth:`restore` instead."""
+        store.ensure_keys(np.asarray(jax.device_get(self.keys)))
+        wal_tail = store.replay_wal()
+        if store.durable_records > self._num_records or wal_tail:
+            # ahead in segments OR carrying an unflushed WAL tail: a fresh
+            # attach would log conflicting blocks at already-claimed
+            # offsets and make the store unrecoverable
+            raise ValueError(
+                f"store already holds {store.durable_records} durable "
+                f"records and {len(wal_tail)} WAL tail blocks; "
+                "use StreamingIndexer.restore to resume from a store")
+        self._store = store
+        self._flush_records = flush_records
+        if self._num_records > store.durable_records:
+            # records indexed before the attach were never WAL-logged —
+            # flush them now so recovery has no gap below the WAL floor
+            self.spill()
+
+    def spill(self) -> None:
+        """Flush the in-memory tail past the store's durable prefix as one
+        immutable segment (atomic manifest commit + WAL rotation).  A
+        no-op when nothing new has arrived since the last spill."""
+        if self._store is None:
+            raise RuntimeError("no store attached (see attach_store)")
+        start = self._store.durable_records
+        count = self._num_records - start
+        if count <= 0:
+            return
+        tail = policy.extract_packed(self._buf, start, count)
+        self._store.write_segment(
+            np.asarray(jax.device_get(tail)), count, start,
+            tick_watermark=(self._last_tick, self._last_tick_blocks))
+
+    def _maybe_spill(self) -> None:
+        if (self._store is not None and self._flush_records is not None
+                and (self._num_records - self._store.durable_records
+                     >= self._flush_records)):
+            self.spill()
+
+    def _log_block(self, records: jax.Array, start: int,
+                   tick: int | None = None) -> None:
+        if self._store is not None:
+            self._store.log_block(np.asarray(jax.device_get(records)),
+                                  start, tick)
+
+    @classmethod
+    def restore(cls, store, keys, *, backend: str = "auto",
+                capacity_words: int = 16,
+                flush_records: int | None = 4096) -> "StreamingIndexer":
+        """Crash recovery: load the committed segments, re-index the
+        surviving WAL blocks (backends are pure functions of their
+        inputs), and splice them on — the result is bit-identical to the
+        pre-crash in-memory index, with the store re-attached for further
+        appends."""
+        si = cls(keys, backend=backend, capacity_words=capacity_words)
+        store.ensure_keys(np.asarray(jax.device_get(si.keys)))
+        m = store.manifest
+        si._last_tick = m.last_tick
+        si._last_tick_blocks = m.last_tick_blocks
+        packed, n = store.load_packed()
+        if n:
+            si._grow(packed.shape[1] + 1)
+            si._buf = si._buf.at[:, :packed.shape[1]].set(jnp.asarray(packed))
+            si._num_records = n
+        be = backends.get_backend(si.backend)
+        for start, rec, tick in store.replay_wal():
+            if start != si._num_records:
+                raise ValueError(
+                    f"WAL block starts at record {start} but the recovered "
+                    f"stream position is {si._num_records}")
+            block = be.create_index(jnp.asarray(rec), si.keys)
+            si._grow(start // policy.PACK + block.shape[1] + 1)
+            si._buf = _splice(si._buf, jnp.int32(start), block)
+            si._num_records += rec.shape[0]
+            si._stamp_tick(tick)
+        # attach AFTER replay: replayed blocks are already in the WAL
+        si._store = store
+        si._flush_records = flush_records
+        return si
+
+    # --------------------------------------------------------------- append
     def append(self, records: jax.Array) -> policy.BitmapIndex:
         """Index a (N', W) record block and splice it in; returns the
         updated live index.  An empty block is a no-op (no dispatch)."""
@@ -187,9 +311,24 @@ class StreamingIndexer:
             return self.index
         block = backends.get_backend(self.backend).create_index(
             records, self.keys)
+        return self.append_indexed(records, block)
+
+    def append_indexed(self, records: jax.Array, block: jax.Array, *,
+                       tick: int | None = None) -> policy.BitmapIndex:
+        """Splice in a block whose (M, ceil(N'/32)) index ``block`` was
+        already built elsewhere (e.g. by a sharded tick dispatch) — the raw
+        ``records`` are still WAL-logged so recovery can re-index them.
+        ``tick`` stamps the block for replay idempotence (see
+        :attr:`last_tick`)."""
+        n_new = int(records.shape[0])
+        if n_new == 0:
+            return self.index
+        self._log_block(records, self._num_records, tick)
         self._grow(self._num_records // policy.PACK + block.shape[1] + 1)
         self._buf = _splice(self._buf, jnp.int32(self._num_records), block)
         self._num_records += n_new
+        self._stamp_tick(tick)
+        self._maybe_spill()
         return self.index
 
     def append_many(self, records: jax.Array, *, mesh: Mesh | None = None,
@@ -200,6 +339,11 @@ class StreamingIndexer:
         b, n_blk = int(records.shape[0]), int(records.shape[1])
         if b == 0 or n_blk == 0:
             return self.index
+        if self._store is not None:
+            host = np.asarray(jax.device_get(records))
+            for i in range(b):
+                self._store.log_block(host[i],
+                                      self._num_records + i * n_blk)
         if mesh is not None:
             blocks = multicore_create_index(records, self.keys, mesh, axis,
                                             backend=self.backend)
@@ -210,6 +354,7 @@ class StreamingIndexer:
         self._buf, _ = _fold_scan(self._buf, jnp.int32(self._num_records),
                                   blocks, n_blk)
         self._num_records = total
+        self._maybe_spill()
         return self.index
 
     @property
@@ -239,6 +384,11 @@ class TickResult:
     report: EnergyReport
     query_rows: jax.Array | None = None     # (Q, ceil(B_t*N/32)) uint32
     query_counts: jax.Array | None = None   # (Q,) int32
+    measured_seconds: float = 0.0           # wall-clock of the tick dispatch
+    # record MB/s of THIS dispatch, in PAPER units: one 8-bit record word
+    # = one byte (matching bic_create_cpu and the elastic cycle model),
+    # regardless of the int32 container the words travel in
+    measured_mbps: float = 0.0
 
 
 class MulticoreRuntime:
@@ -248,24 +398,91 @@ class MulticoreRuntime:
     the mesh (reusing :func:`multicore_create_index`) and charges the
     elastic scheduler's calibrated power model for the cores the *policy*
     would activate (``cores_needed``); idle cores accrue standby energy
-    (CG / CG+RBB).  Joules follow the paper-clock model, not the actual
-    device dispatch (which always spans the mesh).
+    (CG / CG+RBB).
+
+    Every dispatch is wall-clock measured and folded into a throughput
+    EWMA (``measured_mbps``).  By default joules still follow the
+    paper-clock model; with ``calibrate_energy=True`` the measured busy
+    time replaces the model's busy time for active energy AND the
+    scheduler's per-core batch time is re-derived from the measured MB/s
+    (``ElasticScheduler.calibrate``), so both joules and the activation
+    policy track the device actually running the dispatch.
+
+    With ``store_dir=...`` the runtime keeps one durable index per core:
+    tick batches are assigned round-robin to per-core
+    :class:`StreamingIndexer`\\ s (splicing the already-built per-batch
+    block indexes — no re-indexing), each backed by its own
+    ``repro.store.SegmentStore`` under ``<store_dir>/core-<z>`` with
+    WAL-before-splice durability and ``flush_records`` segment spills.  A
+    restarted runtime pointed at the same directory recovers every
+    per-core index bit-identically (manifest + WAL replay).
     """
 
     def __init__(self, mesh: Mesh, axis: str = "data",
                  cfg: BICConfig = PaperConfig,
                  state: PowerState = PowerState(), *,
-                 backend: str = "auto"):
+                 backend: str = "auto", calibrate_energy: bool = False,
+                 store_dir: str | None = None, flush_records: int = 4096,
+                 throughput_ewma: float = 0.5):
         self.mesh = mesh
         self.axis = axis
         self.backend = backends.resolve_backend(backend)
-        num_cores = dict(mesh.shape)[axis]
-        self.scheduler = ElasticScheduler(num_cores, cfg, state)
+        self.num_cores = dict(mesh.shape)[axis]
+        self.scheduler = ElasticScheduler(self.num_cores, cfg, state)
         self.report = EnergyReport()
+        self.calibrate_energy = calibrate_energy
+        self.store_dir = store_dir
+        self.flush_records = flush_records
+        self.throughput_ewma = throughput_ewma
+        self.measured_mbps = 0.0            # EWMA over non-idle ticks
+        self._core_si: list[StreamingIndexer] | None = None
+
+    # ---------------------------------------------------- per-core indexes
+    def core_indexers(self, keys: jax.Array) -> list[StreamingIndexer]:
+        """The per-core durable indexers (created, or recovered from the
+        store, on first use).  Requires ``store_dir``; every call must use
+        the SAME keys the indexers were created with."""
+        if self.store_dir is None:
+            raise RuntimeError("MulticoreRuntime has no store_dir")
+        if self._core_si is not None:
+            cached = self._core_si[0].keys
+            keys32 = jnp.asarray(keys, jnp.int32)
+            if (cached.shape != keys32.shape
+                    or not bool(jnp.all(cached == keys32))):
+                raise ValueError(
+                    "per-core indexers were created with a different key "
+                    "set; a runtime persists ONE key set per store_dir")
+        if self._core_si is None:
+            from repro.store import SegmentStore
+            sis = []
+            for z in range(self.num_cores):
+                st = SegmentStore(os.path.join(self.store_dir, f"core-{z}"))
+                if st.durable_records or st.replay_wal():
+                    si = StreamingIndexer.restore(
+                        st, keys, backend=self.backend,
+                        flush_records=self.flush_records)
+                else:
+                    si = StreamingIndexer(keys, backend=self.backend)
+                    si.attach_store(st, flush_records=self.flush_records)
+                sis.append(si)
+            self._core_si = sis
+        return self._core_si
+
+    def core_indexes(self, keys: jax.Array) -> list[policy.BitmapIndex]:
+        """The live per-core cumulative indexes (recovering from the store
+        first if this runtime has not ticked yet)."""
+        return [si.index for si in self.core_indexers(keys)]
+
+    def checkpoint(self) -> None:
+        """Force-spill every per-core in-memory tail to its segment store
+        (e.g. before a planned shutdown)."""
+        for si in self._core_si or ():
+            si.spill()
 
     def run_tick(self, records: jax.Array | None, keys: jax.Array,
                  tick_seconds: float, *,
-                 queries: Sequence | None = None) -> TickResult:
+                 queries: Sequence | None = None,
+                 tick_id: int | None = None) -> TickResult:
         """records (B_t, N, W) for this tick (None = idle tick).
 
         ``queries`` — an optional batch of predicate trees (or pre-built
@@ -274,22 +491,64 @@ class MulticoreRuntime:
         splice) and the whole batch executes through
         :func:`repro.engine.batch.execute_many` in a few bucketed
         dispatches.  Results land in ``TickResult.query_rows/query_counts``
-        in query order."""
+        in query order.
+
+        ``tick_id`` (monotone) makes the durable per-core appends
+        **idempotent under replay**: the id is WAL-stamped with every
+        block and survives spill/crash/restore, so re-feeding the tick
+        that was in flight at crash time appends only to the cores that
+        had not absorbed it yet.  Without ``tick_id`` the driver owns
+        exactly-once tick delivery."""
         wl = 0 if records is None else records.shape[0]
-        tick = self.scheduler.run([wl], tick_seconds)
-        self.report.merge(tick)
         if wl == 0:
+            tick = self.scheduler.account(0, tick_seconds)
+            self.report.merge(tick)
             return TickResult(None, 0, tick)
+        t0 = time.perf_counter()
         out = multicore_create_index(records, keys, self.mesh, self.axis,
                                      backend=self.backend)
+        jax.block_until_ready(out)
+        elapsed = max(time.perf_counter() - t0, 1e-9)
+        # paper units: one 8-bit record word = one byte (see TickResult)
+        mbps = wl * records.shape[1] * records.shape[2] / 1e6 / elapsed
+        a = self.throughput_ewma
+        self.measured_mbps = (mbps if self.measured_mbps == 0.0
+                              else a * mbps + (1 - a) * self.measured_mbps)
+        if self.calibrate_energy:
+            self.scheduler.calibrate(self.measured_mbps / self.num_cores)
+            tick = self.scheduler.account(
+                wl, tick_seconds, busy_seconds=min(elapsed, tick_seconds))
+        else:
+            tick = self.scheduler.account(wl, tick_seconds)
+        self.report.merge(tick)
         z = self.scheduler.cores_needed(wl, tick_seconds)
+        if self.store_dir is not None:
+            sis = self.core_indexers(keys)
+            # crash-replayed tick: each core skips the blocks it already
+            # absorbed (a core can hold several batches per tick, so the
+            # watermark is (tick, blocks), not just the tick id)
+            todo: list[tuple[StreamingIndexer, list[int]]] = []
+            for core in range(self.num_cores):
+                done = (sis[core].absorbed_blocks(tick_id)
+                        if tick_id is not None else 0)
+                if done < 0:
+                    continue
+                blocks = list(range(core, wl, self.num_cores))[done:]
+                if blocks:
+                    todo.append((sis[core], blocks))
+            if todo:                     # one D2H transfer, skipped when
+                host = np.asarray(jax.device_get(records))   # fully replayed
+                for si, blocks in todo:
+                    for b in blocks:
+                        si.append_indexed(host[b], out[b], tick=tick_id)
         qrows = qcounts = None
         if queries is not None and len(queries):
             idx = fold_block_indexes(out, records.shape[1])
             qrows, qcounts = engine_batch.execute_many(
                 idx.packed, queries, num_records=idx.num_records,
                 backend=self.backend)
-        return TickResult(out, z, tick, qrows, qcounts)
+        return TickResult(out, z, tick, qrows, qcounts,
+                          measured_seconds=elapsed, measured_mbps=mbps)
 
     def index_stream(self, ticks: Iterable[jax.Array | None],
                      keys: jax.Array, tick_seconds: float

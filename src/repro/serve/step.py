@@ -35,13 +35,23 @@ def make_decode_step(cfg: ModelConfig):
 
 
 def make_bitmap_query_step(index, *, backend: str = "auto"):
-    """Batched structured-retrieval step over a
-    :class:`repro.engine.policy.BitmapIndex`: the returned
+    """Batched structured-retrieval step over a bitmap index: the returned
     ``query_step(predicates)`` serves many predicate trees per dispatch
     (plan-shape bucketing in ``repro.engine.batch``) and yields
     (rows (Q, Nw) uint32, counts (Q,) int32) in request order — the
     serving-path analogue of ``make_prefill_step`` for the paper's query
-    workload."""
+    workload.
+
+    ``index`` is either an in-memory
+    :class:`repro.engine.policy.BitmapIndex` or a segment-backed
+    :class:`repro.store.StoredIndex` (a spilled/recovered index served
+    segment-parallel — no materialized full buffer)."""
+    if hasattr(index, "parts"):            # repro.store.StoredIndex
+        def query_step(predicates):
+            return _engine_batch.execute_many_segments(
+                index.parts, predicates, backend=backend)
+        return query_step
+
     packed, num_records = index.packed, index.num_records
 
     def query_step(predicates):

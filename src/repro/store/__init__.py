@@ -1,0 +1,17 @@
+"""Durable segment store for packed bitmap indexes.
+
+Public surface:
+
+  * :class:`SegmentStore` — directory of immutable checksummed segments +
+    atomic manifest + write-ahead block log + tiered compaction.
+  * :class:`StoredIndex` / :func:`open_index` — segment-parallel queryable
+    view (serves through :func:`repro.engine.batch.execute_many_segments`).
+  * :func:`recover_index` — manifest + WAL crash recovery to a bit-identical
+    :class:`repro.engine.policy.BitmapIndex`.
+  * :mod:`repro.store.format` — the checksummed serialization substrate
+    (shared with :mod:`repro.checkpoint.store`).
+"""
+from repro.store.format import CorruptFileError  # noqa: F401
+from repro.store.manifest import Manifest, SegmentMeta  # noqa: F401
+from repro.store.store import (SegmentStore, StoredIndex,  # noqa: F401
+                               np_splice, open_index, recover_index)

@@ -1,0 +1,381 @@
+"""`SegmentStore` — the durable, LSM-flavored home of a packed bitmap index.
+
+Layout of one store directory::
+
+    CURRENT                 -> name of the committed manifest
+    MANIFEST-<v>.json       -> ordered live segment set + open WAL generation
+    seg-<id>.seg            -> immutable packed segment (checksummed array file)
+    wal-<gen>.log           -> write-ahead block log for the open tail
+
+A **segment** is an immutable packed slice of the record stream: the
+key-major ``(M, ceil(n/32))`` uint32 words for records
+``[start_record, start_record + n)``, serialized with a versioned header and
+per-array CRCs (:mod:`repro.store.format`).  The **manifest** names the live
+segments in record order and is swapped atomically (write new manifest,
+repoint ``CURRENT``), so every commit is all-or-nothing.  The **WAL** logs
+raw record blocks before they are spliced into the in-memory index; a flush
+writes the in-memory tail as a new segment, commits it, and rotates to a
+fresh WAL generation.  Crash anywhere: recovery loads the committed
+segments, re-indexes the surviving WAL blocks (the backends are pure
+functions), and splices them on — reproducing the never-crashed in-memory
+index word for word.
+
+**Tiered compaction** keeps the segment count logarithmic: segments bucket
+into size tiers (powers of ``compact_fanout`` records) and any run of
+``compact_fanout`` adjacent same-tier segments merges into one via the same
+shift/carry splice the streaming path uses.  Merges write the new segment
+first and commit via the manifest, so compaction is crash-safe too.
+
+Because segments partition the *record axis*, query serving never needs the
+whole index resident: :class:`StoredIndex` runs a query batch against each
+segment and OR-splices the per-segment result rows at their record offsets
+(:func:`repro.engine.batch.execute_many_segments`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Sequence
+
+import numpy as np
+
+from repro.store import format as fmt
+from repro.store import wal as wal_mod
+from repro.store.manifest import Manifest, SegmentMeta, commit, load
+
+PACK = 32
+KEYS_FILE = "KEYS.arr"         # persisted key set (see ensure_keys)
+
+
+def _num_words(n: int) -> int:
+    return -(-n // PACK)
+
+
+def np_splice(dst: np.ndarray, start_bit: int, block: np.ndarray,
+              block_records: int) -> None:
+    """OR packed ``block`` rows into ``dst`` at ``start_bit`` in place
+    (numpy shift/carry; host-side twin of the engine's jitted splice)."""
+    off = start_bit % PACK
+    w0 = start_bit // PACK
+    bw = _num_words(block_records)
+    block = block[:, :bw].astype(np.uint32, copy=False)
+    if off == 0:
+        dst[:, w0:w0 + bw] |= block
+        return
+    # words sliding past the destination tail are provably zero (block bits
+    # past block_records are zero), so clipping them drops nothing
+    hi = (block << np.uint32(off)).astype(np.uint32)
+    carry = (block >> np.uint32(PACK - off)).astype(np.uint32)
+    end = min(w0 + bw, dst.shape[1])
+    dst[:, w0:end] |= hi[:, :end - w0]
+    cend = min(w0 + 1 + bw, dst.shape[1])
+    dst[:, w0 + 1:cend] |= carry[:, :cend - (w0 + 1)]
+
+
+class SegmentStore:
+    """One durable index = one store directory.  All mutation goes through
+    ``log_block`` (WAL append) and ``write_segment`` (flush + manifest
+    commit); both leave the directory recoverable at every instant."""
+
+    def __init__(self, root: str, *, compact_fanout: int = 4,
+                 auto_compact: bool = True):
+        if compact_fanout < 2:
+            raise ValueError("compact_fanout must be >= 2")
+        self.root = root
+        self.compact_fanout = compact_fanout
+        self.auto_compact = auto_compact
+        os.makedirs(root, exist_ok=True)
+        self._manifest = load(root) or Manifest(
+            version=0, segments=(), wal_generation=0, next_segment_id=0)
+        self._wal: wal_mod.WriteAheadLog | None = None
+
+    # ------------------------------------------------------------- accessors
+    @property
+    def manifest(self) -> Manifest:
+        return self._manifest
+
+    @property
+    def segments(self) -> tuple[SegmentMeta, ...]:
+        return self._manifest.segments
+
+    @property
+    def durable_records(self) -> int:
+        """Records covered by committed segments (WAL tail excluded)."""
+        return self._manifest.durable_records
+
+    @property
+    def num_keys(self) -> int | None:
+        segs = self._manifest.segments
+        return segs[0].num_keys if segs else None
+
+    def wal_path(self) -> str:
+        return wal_mod.wal_path(self.root, self._manifest.wal_generation)
+
+    # ---------------------------------------------------------- key identity
+    def ensure_keys(self, keys: np.ndarray) -> None:
+        """Persist the key set on first use; afterwards reject ANY
+        different key set (even one of the same length) — segments and
+        WAL re-indexing are only meaningful under one key set, and a
+        same-shape mismatch would recover a silently corrupt index."""
+        keys = np.ascontiguousarray(keys, dtype=np.int32)
+        path = os.path.join(self.root, KEYS_FILE)
+        if os.path.exists(path):
+            stored, _ = fmt.read_array_file(path)
+            if not np.array_equal(stored["keys"], keys):
+                raise ValueError(
+                    f"store {self.root} was built with a different key "
+                    "set; one store persists ONE index")
+        else:
+            fmt.write_array_file(path, {"keys": keys})
+
+    # ------------------------------------------------------------------- WAL
+    def log_block(self, records: np.ndarray, start: int,
+                  tick: int | None = None) -> None:
+        """Durably log a raw record block BEFORE it is spliced in memory."""
+        if self._wal is None:
+            self._wal = wal_mod.WriteAheadLog(self.wal_path())
+        self._wal.append_block(np.asarray(records), start, tick)
+
+    def replay_wal(self) -> list[tuple[int, np.ndarray, int | None]]:
+        """Intact WAL (start, records, tick) blocks not yet covered by a
+        committed segment, in stream order — exactly what recovery must
+        re-index."""
+        floor = self.durable_records
+        return [(start, rec, tick)
+                for start, rec, tick in wal_mod.replay(self.wal_path())
+                if start >= floor]
+
+    # -------------------------------------------------------------- segments
+    def segment_path(self, meta: SegmentMeta) -> str:
+        return os.path.join(self.root, meta.file)
+
+    def read_segment(self, meta: SegmentMeta) -> np.ndarray:
+        """Load + verify one segment's packed words."""
+        arrays, fmeta = fmt.read_array_file(self.segment_path(meta))
+        packed = arrays["packed"]
+        if (fmeta.get("num_records") != meta.num_records
+                or fmeta.get("segment_id") != meta.segment_id
+                or packed.shape != (meta.num_keys,
+                                    _num_words(meta.num_records))):
+            raise fmt.CorruptFileError(
+                f"{meta.file}: segment meta mismatch (manifest says "
+                f"{meta}, file says {fmeta} / {packed.shape})")
+        return packed
+
+    def write_segment(self, packed: np.ndarray, num_records: int,
+                      start_record: int, *,
+                      tick_watermark: tuple[int, int] | None = None
+                      ) -> SegmentMeta:
+        """Flush a packed tail slice as a new immutable segment and commit:
+        segment file first, then an atomic manifest swap that also rotates
+        the WAL generation (the flushed records no longer need the log).
+        ``tick_watermark`` carries the (tick, blocks) watermark of the
+        flushed records into the manifest (it must survive the WAL
+        rotation)."""
+        m = self._manifest
+        if start_record != m.durable_records:
+            raise ValueError(
+                f"segment must extend the stream: start={start_record}, "
+                f"durable={m.durable_records}")
+        if num_records <= 0:
+            raise ValueError("segment needs at least one record")
+        packed = np.ascontiguousarray(packed, dtype=np.uint32)
+        if self.num_keys is not None and packed.shape[0] != self.num_keys:
+            raise ValueError(f"segment has {packed.shape[0]} key rows, "
+                             f"store has {self.num_keys}")
+        if packed.shape[1] != _num_words(num_records):
+            raise ValueError(f"packed shape {packed.shape} does not match "
+                             f"{num_records} records")
+        meta = self._write_segment_file(packed, num_records, start_record)
+        tick, blocks = (tick_watermark if tick_watermark is not None
+                        else (m.last_tick, m.last_tick_blocks))
+        self._commit(dataclasses.replace(
+            m, version=m.version + 1, segments=m.segments + (meta,),
+            wal_generation=m.wal_generation + 1,
+            next_segment_id=m.next_segment_id + 1,
+            last_tick=tick, last_tick_blocks=blocks))
+        if self.auto_compact:
+            self.compact()
+        return meta
+
+    def _write_segment_file(self, packed: np.ndarray, num_records: int,
+                            start_record: int) -> SegmentMeta:
+        """Write the next segment id's immutable file (flush and merge
+        share this); the segment becomes live only at the manifest commit."""
+        m = self._manifest
+        meta = SegmentMeta(segment_id=m.next_segment_id,
+                           file=f"seg-{m.next_segment_id:08d}.seg",
+                           start_record=start_record,
+                           num_records=num_records,
+                           num_keys=packed.shape[0])
+        fmt.write_array_file(
+            os.path.join(self.root, meta.file), {"packed": packed},
+            meta={"segment_id": meta.segment_id,
+                  "start_record": meta.start_record,
+                  "num_records": meta.num_records})
+        return meta
+
+    def _commit(self, new: Manifest) -> None:
+        commit(self.root, new)
+        self._manifest = new
+        if self._wal is not None:           # rotated: next log_block reopens
+            self._wal.close()
+            self._wal = None
+
+    # ------------------------------------------------------------ compaction
+    def _tier(self, num_records: int) -> int:
+        # integer arithmetic: float log truncates exact fanout powers
+        # (int(math.log(243, 3)) == 4) and would mis-bucket them
+        tier, bound = 0, self.compact_fanout
+        while num_records >= bound:
+            tier += 1
+            bound *= self.compact_fanout
+        return tier
+
+    def compact(self) -> int:
+        """Tiered merge: while any ``compact_fanout``-long run of adjacent
+        same-tier segments exists, splice it into one segment (write new
+        file, atomic manifest swap).  Returns the number of merges."""
+        merges = 0
+        while True:
+            run = self._find_run()
+            if run is None:
+                return merges
+            self._merge(*run)
+            merges += 1
+
+    def _find_run(self) -> tuple[int, int] | None:
+        segs = self._manifest.segments
+        i = 0
+        while i < len(segs):
+            j = i
+            t = self._tier(segs[i].num_records)
+            while (j < len(segs)
+                   and self._tier(segs[j].num_records) == t):
+                j += 1
+            if j - i >= self.compact_fanout:
+                return i, i + self.compact_fanout
+            i += 1
+        return None
+
+    def _merge(self, lo: int, hi: int) -> None:
+        m = self._manifest
+        run = m.segments[lo:hi]
+        total = sum(s.num_records for s in run)
+        merged = np.zeros((run[0].num_keys, _num_words(total)), np.uint32)
+        at = 0
+        for s in run:
+            np_splice(merged, at, self.read_segment(s), s.num_records)
+            at += s.num_records
+        meta = self._write_segment_file(merged, total, run[0].start_record)
+        self._commit(dataclasses.replace(
+            m, version=m.version + 1,
+            segments=m.segments[:lo] + (meta,) + m.segments[hi:],
+            next_segment_id=m.next_segment_id + 1))
+
+    # ------------------------------------------------------------- bulk read
+    def load_packed(self) -> tuple[np.ndarray, int]:
+        """Materialize the committed segments as one packed array
+        ``(M, ceil(n/32))`` (WAL tail excluded).  Segments are contiguous
+        and start 32-aligned relative to nothing — the host splice handles
+        arbitrary offsets."""
+        segs = self._manifest.segments
+        n = self.durable_records
+        if not segs:
+            return np.zeros((0, 0), np.uint32), 0
+        out = np.zeros((segs[0].num_keys, _num_words(n)), np.uint32)
+        for s in segs:
+            np_splice(out, s.start_record, self.read_segment(s),
+                      s.num_records)
+        return out, n
+
+    # -------------------------------------------------------------------- gc
+    def gc(self) -> list[str]:
+        """Delete files unreachable from CURRENT (orphan segments from
+        crashed flushes, superseded manifests, rotated WALs)."""
+        m = self._manifest
+        keep = {"CURRENT", f"MANIFEST-{m.version:08d}.json",
+                os.path.basename(self.wal_path())}
+        keep |= {s.file for s in m.segments}
+        removed = []
+        for name in os.listdir(self.root):
+            if name in keep:
+                continue
+            # includes stale .tmp files (crash mid-atomic-write): the
+            # atomic writers finish their replace before returning, so an
+            # unreferenced .tmp is never about to become live
+            if (name.startswith(("seg-", "wal-", "MANIFEST-"))
+                    or name.endswith(".tmp")):
+                os.remove(os.path.join(self.root, name))
+                removed.append(name)
+        return removed
+
+    def close(self) -> None:
+        if self._wal is not None:
+            self._wal.close()
+            self._wal = None
+
+
+# --------------------------------------------------------- queryable handle
+@dataclasses.dataclass
+class StoredIndex:
+    """Segment-parallel queryable view of a (possibly spilled) index: an
+    ordered list of per-segment packed arrays covering disjoint record
+    ranges, plus the total record count.  ``query_many`` serves a batch of
+    predicate trees with one bucketed dispatch per segment and OR-splices
+    the per-segment rows at their record offsets — no materialized
+    full-index buffer (see :func:`repro.engine.batch.execute_many_segments`).
+    """
+    parts: tuple            # of (packed jax/np (M, w_i) uint32, n_i records)
+    num_records: int
+
+    @property
+    def num_keys(self) -> int:
+        return int(self.parts[0][0].shape[0]) if self.parts else 0
+
+    @property
+    def num_segments(self) -> int:
+        return len(self.parts)
+
+    def query_many(self, predicates: Sequence, *, backend: str = "auto"):
+        from repro.engine import batch as engine_batch
+        return engine_batch.execute_many_segments(
+            self.parts, predicates, backend=backend)
+
+    def to_bitmap_index(self):
+        """Materialize one contiguous :class:`repro.engine.policy.BitmapIndex`
+        (tests / small indexes only — serving should stay segment-parallel)."""
+        from repro.engine import policy
+        from repro.engine.runtime import append_packed
+        import jax.numpy as jnp
+        packed = jnp.zeros((self.num_keys, 0), jnp.uint32)
+        n = 0
+        for part, cnt in self.parts:
+            packed = append_packed(packed, n, jnp.asarray(part), cnt)
+            n += cnt
+        return policy.BitmapIndex(packed, n)
+
+
+def open_index(store: SegmentStore, *, tail=None) -> StoredIndex:
+    """Open the committed segment set as a :class:`StoredIndex`.  ``tail``
+    optionally appends an in-memory packed suffix ``(packed, num_records)``
+    — e.g. a recovered WAL tail not yet flushed."""
+    import jax.numpy as jnp
+    parts = [(jnp.asarray(store.read_segment(s)), s.num_records)
+             for s in store.segments]
+    n = store.durable_records
+    if tail is not None:
+        tpacked, tcount = tail
+        if tcount:
+            parts.append((jnp.asarray(tpacked), int(tcount)))
+            n += int(tcount)
+    return StoredIndex(tuple(parts), n)
+
+
+def recover_index(store: SegmentStore, keys, *, backend: str = "auto"):
+    """Full crash recovery: committed segments + re-indexed WAL tail ->
+    a :class:`repro.engine.policy.BitmapIndex` bit-identical to the
+    never-crashed in-memory index (see ``StreamingIndexer.restore`` for
+    recovery into a live appendable indexer)."""
+    from repro.engine.runtime import StreamingIndexer
+    return StreamingIndexer.restore(store, keys, backend=backend).index

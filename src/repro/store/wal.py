@@ -1,0 +1,77 @@
+"""Write-ahead block log for streaming index appends.
+
+Every record block appended to a store-attached ``StreamingIndexer`` is
+logged here *before* it is spliced into the in-memory packed index, so a
+crash between appends loses nothing: recovery re-indexes the logged blocks
+deterministically (the engine backends are pure functions of their inputs)
+and splices them onto the last durable segment, reproducing the in-memory
+index bit for bit.
+
+The log is generation-numbered (``wal-<gen>.log``).  When a segment flush
+makes a prefix of the stream durable, the manifest commit switches to the
+next generation and the old log becomes garbage — entries are never
+rewritten in place.  Each entry carries the absolute record offset of its
+block (``start``), so replay can also skip any block a committed segment
+already covers (the crash-between-flush-and-rotate window).
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from repro.store import format as fmt
+
+
+def wal_path(root: str, generation: int) -> str:
+    return os.path.join(root, f"wal-{generation:08d}.log")
+
+
+class WriteAheadLog:
+    """Append-only block log, one open generation at a time."""
+
+    def __init__(self, path: str):
+        self.path = path
+        intact = fmt.intact_log_length(path)
+        if intact == 0:
+            self._f = open(path, "wb")       # fresh (or headerless) log
+            fmt.write_log_header(self._f)
+            # make the directory entry durable too: without this a crash
+            # could drop the whole file, silently erasing every
+            # acknowledged block logged since the last segment
+            fmt.fsync_dir(os.path.dirname(path) or ".")
+            return
+        # drop any torn/corrupt tail BEFORE appending — entries written
+        # after a torn frame would be unreachable to every reader
+        self._f = open(path, "r+b")
+        if os.path.getsize(path) > intact:
+            self._f.truncate(intact)
+        self._f.seek(intact)
+
+    def append_block(self, records: np.ndarray, start: int,
+                     tick: int | None = None) -> None:
+        """Durably log a record block whose first record has absolute
+        offset ``start`` in the stream.  ``tick`` optionally stamps the
+        workload tick that produced the block (the replay-idempotence
+        watermark — see ``MulticoreRuntime.run_tick(tick_id=)``)."""
+        records = np.ascontiguousarray(records)
+        meta = {"start": int(start), "dtype": str(records.dtype),
+                "shape": list(records.shape)}
+        if tick is not None:
+            meta["tick"] = int(tick)
+        fmt.append_log_entry(self._f, meta, records.tobytes())
+
+    def close(self) -> None:
+        self._f.close()
+
+
+def replay(path: str) -> list[tuple[int, np.ndarray, int | None]]:
+    """All intact (start, records, tick) entries of a log, in append
+    order.  Torn/corrupt tails (crash mid-append) are dropped, not
+    raised."""
+    out = []
+    for meta, payload in fmt.read_log_entries(path):
+        arr = np.frombuffer(payload, dtype=np.dtype(meta["dtype"]))
+        out.append((meta["start"], arr.reshape(meta["shape"]),
+                    meta.get("tick")))
+    return out

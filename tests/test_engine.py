@@ -87,6 +87,23 @@ def test_plan_shape_is_cache_key():
     assert a.clauses != b.clauses
 
 
+def test_plan_clauses_ordered_cheapest_first():
+    """Satellite: DNF clauses order by literal count (cheapest pass first,
+    short-circuit potential for composite executors) — and since the plan
+    is an OR of clauses, the ordering never changes a result bit."""
+    p = key(9) | (key(1) & key(2) & key(3)) | (key(4) & key(5))
+    pl = plan(p)
+    assert pl.shape == (1, 2, 3)
+    assert pl.shape == tuple(sorted(pl.shape))
+    records, keys = _random_index(70, 12)
+    idx = backends.get_backend("ref").create_index(records, keys)
+    r1, c1 = execute(idx, pl, num_records=70, backend="ref")
+    r2, c2 = execute(idx, QueryPlan(tuple(reversed(pl.clauses))),
+                     num_records=70, backend="ref")
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+    assert int(c1) == int(c2)
+
+
 def test_include_exclude_compiles_to_single_pass():
     p = from_include_exclude([2, 4], [5])
     assert plan(p).clauses == (((2, False), (4, False), (5, True)),)

@@ -1,0 +1,627 @@
+"""repro.store: durable segment store, WAL recovery, segment-parallel
+serving.
+
+The acceptance bar (ISSUE 3):
+  * recovery is bit-exact — an index spilled mid-stream, "crashed", and
+    recovered from manifest + WAL equals the never-spilled in-memory
+    packed index word for word;
+  * segment-parallel ``query_many`` over a spilled index matches in-memory
+    results for the same predicate trees;
+  * torn WAL tails and corrupt segment files fail loudly (CRC), never
+    silently feed garbage bits.
+"""
+import os
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.engine import backends, batch, policy
+from repro.engine.planner import execute, key
+from repro.engine.runtime import MulticoreRuntime, StreamingIndexer
+from repro.store import (CorruptFileError, SegmentStore, np_splice,
+                         open_index, recover_index)
+from repro.store import format as fmt
+from repro.store import wal as wal_mod
+
+RNG = np.random.default_rng(77)
+
+
+def _keys(m=11, hi=32):
+    return jnp.asarray(RNG.integers(0, hi, (m,), dtype=np.int32))
+
+
+def _blocks(sizes, w=5, hi=32):
+    return [jnp.asarray(RNG.integers(0, hi, (n, w), dtype=np.int32))
+            for n in sizes]
+
+
+def _rebuild(blocks, keys):
+    return backends.get_backend("ref").create_index(
+        jnp.concatenate(blocks, axis=0), keys)
+
+
+# -------------------------------------------------------- format substrate
+def test_array_file_roundtrip(tmp_path):
+    arrays = {"a": np.arange(12, dtype=np.uint32).reshape(3, 4),
+              "b": np.linspace(0, 1, 5, dtype=np.float32)}
+    path = str(tmp_path / "x.seg")
+    fmt.write_array_file(path, arrays, meta={"n": 7})
+    out, meta = fmt.read_array_file(path)
+    assert meta == {"n": 7}
+    for k in arrays:
+        np.testing.assert_array_equal(out[k], arrays[k])
+        assert out[k].dtype == arrays[k].dtype
+
+
+def test_array_file_detects_corruption(tmp_path):
+    path = str(tmp_path / "x.seg")
+    fmt.write_array_file(path, {"a": np.arange(64, dtype=np.uint32)})
+    raw = bytearray(open(path, "rb").read())
+    raw[-5] ^= 0x10                       # flip one payload bit
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(CorruptFileError, match="CRC"):
+        fmt.read_array_file(path)
+    open(path, "wb").write(bytes(raw[: len(raw) // 2]))   # truncation
+    with pytest.raises(CorruptFileError):
+        fmt.read_array_file(path)
+    open(path, "wb").write(b"JUNKJUNKJUNK")
+    with pytest.raises(CorruptFileError, match="magic"):
+        fmt.read_array_file(path)
+    open(path, "wb").write(fmt.ARRAY_MAGIC + b"\x01\x00")   # 6-byte stump
+    with pytest.raises(CorruptFileError, match="preamble"):
+        fmt.read_array_file(path)
+
+
+def test_wal_roundtrip_and_torn_tail(tmp_path):
+    path = str(tmp_path / "wal.log")
+    w = wal_mod.WriteAheadLog(path)
+    b1 = RNG.integers(0, 99, (4, 3)).astype(np.int32)
+    b2 = RNG.integers(0, 99, (7, 3)).astype(np.int32)
+    w.append_block(b1, 0)
+    w.append_block(b2, 4, tick=5)
+    w.close()
+    got = wal_mod.replay(path)
+    assert [(s, r.shape, t) for s, r, t in got] == [
+        (0, (4, 3), None), (4, (7, 3), 5)]
+    np.testing.assert_array_equal(got[1][1], b2)
+    # torn tail: cut mid-second-entry -> only the first survives, no raise
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.truncate(size - 9)
+    got = wal_mod.replay(path)
+    assert len(got) == 1
+    np.testing.assert_array_equal(got[0][1], b1)
+
+
+# ------------------------------------------------------ spill + recovery
+@pytest.mark.parametrize("sizes,flush", [
+    ([17, 33, 5, 64, 9], 40),        # unaligned segment boundaries + tail
+    ([16, 16, 16], 16),              # aligned, every append spills
+    ([7, 3, 2], 1000),               # nothing ever spills: pure WAL replay
+    ([50], 10),                      # single oversized block
+])
+def test_crash_recovery_bit_exact(tmp_path, sizes, flush):
+    """Acceptance: kill after N appends, recover from manifest + WAL,
+    assert bit-identical packed words vs the never-spilled index."""
+    keys = _keys()
+    blocks = _blocks(sizes)
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(SegmentStore(str(tmp_path)), flush_records=flush)
+    for b in blocks:
+        si.append(b)
+    want = _rebuild(blocks, keys)
+    np.testing.assert_array_equal(np.asarray(si.index.packed),
+                                  np.asarray(want))
+    # "crash": the object dies; a fresh store over the same dir recovers
+    si2 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    assert si2.num_records == sum(sizes)
+    np.testing.assert_array_equal(np.asarray(si2.index.packed),
+                                  np.asarray(want))
+    # and the recovered indexer keeps appending correctly
+    extra = _blocks([21])[0]
+    si2.append(extra)
+    want2 = _rebuild(blocks + [extra], keys)
+    np.testing.assert_array_equal(np.asarray(si2.index.packed),
+                                  np.asarray(want2))
+
+
+def test_recovery_drops_torn_wal_tail(tmp_path):
+    keys = _keys()
+    blocks = _blocks([11, 13])
+    si = StreamingIndexer(keys, backend="ref")
+    store = SegmentStore(str(tmp_path))
+    si.attach_store(store, flush_records=None)
+    for b in blocks:
+        si.append(b)
+    wal = store.wal_path()
+    with open(wal, "r+b") as f:          # crash mid-append of block 2
+        f.truncate(os.path.getsize(wal) - 7)
+    si2 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    assert si2.num_records == 11
+    np.testing.assert_array_equal(np.asarray(si2.index.packed),
+                                  np.asarray(_rebuild(blocks[:1], keys)))
+
+
+def test_recovery_ignores_orphan_segment(tmp_path):
+    """Crash between segment-file write and manifest commit: the orphan
+    file is invisible (CURRENT still points at the old set) and the WAL
+    still covers its records."""
+    keys = _keys()
+    blocks = _blocks([9, 14])
+    store = SegmentStore(str(tmp_path))
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(store, flush_records=None)
+    for b in blocks:
+        si.append(b)
+    # simulated half-flush: segment file exists, manifest never committed
+    tail = policy.extract_packed(si.index.packed, 0, 23)
+    fmt.write_array_file(str(tmp_path / "seg-00000099.seg"),
+                         {"packed": np.asarray(jax.device_get(tail))},
+                         meta={"segment_id": 99, "start_record": 0,
+                               "num_records": 23})
+    si2 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    assert si2.num_records == 23
+    np.testing.assert_array_equal(np.asarray(si2.index.packed),
+                                  np.asarray(_rebuild(blocks, keys)))
+    assert "seg-00000099.seg" in SegmentStore(str(tmp_path)).gc()
+
+
+def test_segment_crc_detects_bit_flip(tmp_path):
+    keys = _keys()
+    store = SegmentStore(str(tmp_path))
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(store, flush_records=None)
+    si.append(_blocks([40])[0])
+    si.spill()
+    seg = store.segments[0]
+    path = store.segment_path(seg)
+    raw = bytearray(open(path, "rb").read())
+    raw[-2] ^= 0x04
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(CorruptFileError):
+        SegmentStore(str(tmp_path)).load_packed()
+
+
+def test_spill_is_idempotent_and_attach_validates(tmp_path):
+    keys = _keys()
+    store = SegmentStore(str(tmp_path))
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(store, flush_records=None)
+    si.append(_blocks([10])[0])
+    si.spill()
+    v = store.manifest.version
+    si.spill()                            # nothing new: no commit
+    assert store.manifest.version == v
+    # a fresh empty indexer cannot claim a non-empty store
+    with pytest.raises(ValueError, match="restore"):
+        StreamingIndexer(keys, backend="ref").attach_store(store)
+    # and a different key set (any length) is rejected
+    with pytest.raises(ValueError, match="key set"):
+        StreamingIndexer(_keys(m=5), backend="ref").attach_store(store)
+
+
+def test_appends_after_torn_tail_recovery_survive_next_recovery(tmp_path):
+    """Regression: reopening a torn WAL must truncate the torn frame
+    BEFORE appending — bytes after a torn frame are unreachable to
+    readers, so a post-recovery append would otherwise vanish on the
+    second recovery."""
+    keys = _keys()
+    b1, b2, b3 = _blocks([11, 9, 9])
+    si = StreamingIndexer(keys, backend="ref")
+    store = SegmentStore(str(tmp_path))
+    si.attach_store(store, flush_records=None)
+    si.append(b1)
+    si.append(b2)
+    wal = store.wal_path()
+    with open(wal, "r+b") as f:          # crash mid-append of b2
+        f.truncate(os.path.getsize(wal) - 7)
+    si2 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    assert si2.num_records == 11
+    si2.append(b3)
+    si3 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    assert si3.num_records == 20
+    np.testing.assert_array_equal(np.asarray(si3.index.packed),
+                                  np.asarray(_rebuild([b1, b3], keys)))
+
+
+def test_attach_rejects_store_with_wal_tail(tmp_path):
+    """Regression: a store that crashed before its first spill has no
+    durable records but DOES have WAL blocks; a fresh indexer attaching
+    to it would log conflicting blocks at already-claimed offsets."""
+    keys = _keys()
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(SegmentStore(str(tmp_path)), flush_records=None)
+    si.append(_blocks([11])[0])          # crash: WAL tail, zero segments
+    with pytest.raises(ValueError, match="WAL tail"):
+        StreamingIndexer(keys, backend="ref").attach_store(
+            SegmentStore(str(tmp_path)))
+    # restore remains the sanctioned resume path
+    si2 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    assert si2.num_records == 11
+
+
+def test_attach_spills_pre_existing_prefix(tmp_path):
+    """Regression: records indexed BEFORE the attach were never
+    WAL-logged; attach must flush them immediately or a crash before the
+    first threshold spill would leave an unrecoverable gap below the WAL
+    floor."""
+    keys = _keys()
+    blocks = _blocks([40, 9])
+    si = StreamingIndexer(keys, backend="ref")
+    si.append(blocks[0])                 # in-memory only, no store yet
+    store = SegmentStore(str(tmp_path))
+    si.attach_store(store, flush_records=None)
+    assert store.durable_records == 40   # prefix flushed at attach
+    si.append(blocks[1])                 # WAL-logged; crash here
+    si2 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    assert si2.num_records == 49
+    np.testing.assert_array_equal(np.asarray(si2.index.packed),
+                                  np.asarray(_rebuild(blocks, keys)))
+
+
+def test_empty_stored_index_serves_zero_results(tmp_path):
+    stored = open_index(SegmentStore(str(tmp_path)))
+    assert stored.num_records == 0 and stored.num_segments == 0
+    rows, counts = stored.query_many([key(0), key(3) & ~key(1)],
+                                     backend="ref")
+    assert rows.shape == (2, 0)
+    np.testing.assert_array_equal(np.asarray(counts), [0, 0])
+
+
+def test_pipeline_rejects_stale_key_count(tmp_path):
+    from repro.data.pipeline import BitmapIndexedDataset, DataConfig
+    cfg = DataConfig(vocab_size=64, seq_len=8, docs_per_shard=64,
+                     num_shards=1, num_attributes=32)
+    BitmapIndexedDataset(cfg, store_dir=str(tmp_path)).select(0, include=[1])
+    cfg2 = DataConfig(vocab_size=64, seq_len=8, docs_per_shard=64,
+                      num_shards=1, num_attributes=40)
+    with pytest.raises(ValueError, match="stale store_dir"):
+        BitmapIndexedDataset(cfg2, store_dir=str(tmp_path)).select(
+            0, include=[1])
+
+
+def test_gc_collects_stale_tmp_files(tmp_path):
+    keys = _keys()
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(SegmentStore(str(tmp_path)), flush_records=None)
+    si.append(_blocks([11])[0])
+    si.spill()
+    (tmp_path / "seg-00000099.seg.tmp").write_bytes(b"half-written")
+    (tmp_path / "CURRENT.tmp").write_bytes(b"half")
+    removed = SegmentStore(str(tmp_path)).gc()
+    assert "seg-00000099.seg.tmp" in removed
+    assert "CURRENT.tmp" in removed
+    assert SegmentStore(str(tmp_path)).durable_records == 11
+
+
+def test_restore_rejects_same_length_different_keys(tmp_path):
+    """Regression: the store persists the key VALUES (KEYS.arr), so a
+    restart that passes a different same-length key set fails fast
+    instead of recovering a silently inconsistent index (segments built
+    under old keys + WAL re-indexed under new ones)."""
+    keys = _keys()
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(SegmentStore(str(tmp_path)), flush_records=None)
+    si.append(_blocks([20])[0])          # crash with a WAL tail
+    other = jnp.asarray(np.asarray(keys) + 1)
+    with pytest.raises(ValueError, match="different key set"):
+        StreamingIndexer.restore(SegmentStore(str(tmp_path)), other,
+                                 backend="ref")
+    # the true key set still restores
+    assert StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                    backend="ref").num_records == 20
+
+
+def test_run_tick_replay_is_idempotent(tmp_path):
+    """Regression: re-feeding the tick that was in flight at crash time
+    must append only the blocks each core had NOT yet absorbed — the
+    (tick, blocks) watermark survives restart, so nothing duplicates and
+    nothing is lost."""
+    mesh = _one_device_mesh()
+    keys = jnp.asarray(RNG.integers(0, 256, (8,), dtype=np.int32))
+    rt = MulticoreRuntime(mesh, backend="ref", store_dir=str(tmp_path),
+                          flush_records=1000)
+    t0 = jnp.asarray(RNG.integers(0, 256, (3, 16, 32), dtype=np.int32))
+    t1 = jnp.asarray(RNG.integers(0, 256, (3, 16, 32), dtype=np.int32))
+    rt.run_tick(t0, keys, 0.01, tick_id=0)
+    # crash mid-tick-1: the core absorbed only the first of its 3 batches
+    be = backends.get_backend("ref")
+    rt.core_indexers(keys)[0].append_indexed(
+        t1[0], be.create_index(t1[0], keys), tick=1)
+    # restart + at-least-once replay of tick 1, then a duplicate replay
+    rt2 = MulticoreRuntime(mesh, backend="ref", store_dir=str(tmp_path),
+                           flush_records=1000)
+    rt2.run_tick(t1, keys, 0.01, tick_id=1)
+    rt2.run_tick(t1, keys, 0.01, tick_id=1)      # full duplicate: no-op
+    rec = rt2.core_indexes(keys)[0]
+    assert rec.num_records == 96                 # 6 batches x 16, no dupes
+    want = be.create_index(
+        jnp.concatenate([t0.reshape(-1, 32), t1.reshape(-1, 32)]), keys)
+    np.testing.assert_array_equal(np.asarray(rec.packed), np.asarray(want))
+
+
+def test_runtime_core_indexers_reject_changed_keys(tmp_path):
+    mesh = _one_device_mesh()
+    keys = jnp.asarray(RNG.integers(0, 256, (8,), dtype=np.int32))
+    rt = MulticoreRuntime(mesh, backend="ref", store_dir=str(tmp_path))
+    records = jnp.asarray(RNG.integers(0, 256, (2, 16, 32), dtype=np.int32))
+    rt.run_tick(records, keys, 0.01)
+    other = jnp.asarray(RNG.integers(0, 256, (8,), dtype=np.int32))
+    with pytest.raises(ValueError, match="different key set"):
+        rt.run_tick(records, other, 0.01)
+
+
+# ---------------------------------------------------------- compaction
+def test_tiered_compaction_merges_and_preserves_bits(tmp_path):
+    keys = _keys()
+    store = SegmentStore(str(tmp_path), compact_fanout=3)
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(store, flush_records=None)
+    blocks = _blocks([7] * 9)
+    for b in blocks:
+        si.append(b)
+        si.spill()
+    # 9 x 7-record segments under fanout 3 cascade into one 63-record one
+    assert len(store.segments) < 9
+    assert store.durable_records == 63
+    si2 = StreamingIndexer.restore(SegmentStore(str(tmp_path)), keys,
+                                   backend="ref")
+    np.testing.assert_array_equal(np.asarray(si2.index.packed),
+                                  np.asarray(_rebuild(blocks, keys)))
+
+
+def test_compaction_disabled_keeps_segments(tmp_path):
+    keys = _keys()
+    store = SegmentStore(str(tmp_path), auto_compact=False)
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(store, flush_records=None)
+    for b in _blocks([5] * 6):
+        si.append(b)
+        si.spill()
+    assert len(store.segments) == 6
+    assert store.compact() > 0           # explicit compact still works
+    assert len(store.segments) < 6
+
+
+# ------------------------------------------- segment-parallel query serving
+def _random_pred(rng, m, depth=3):
+    from repro.engine.planner import And, Or
+    if depth == 0 or rng.random() < 0.3:
+        leaf = key(int(rng.integers(0, m)))
+        return ~leaf if rng.random() < 0.4 else leaf
+    arity = int(rng.integers(2, 4))
+    children = tuple(_random_pred(rng, m, depth - 1) for _ in range(arity))
+    node = And(children) if rng.random() < 0.5 else Or(children)
+    return ~node if rng.random() < 0.2 else node
+
+
+def test_execute_many_segments_matches_whole_index():
+    """The batch layer itself: random split points over one index, results
+    bit-identical to execute_many over the unsplit packed array."""
+    n, m = 181, 16
+    records = jnp.asarray(RNG.integers(0, 48, (n, 8), dtype=np.int32))
+    keys = jnp.asarray(RNG.integers(0, 48, (m,), dtype=np.int32))
+    full = backends.get_backend("ref").create_index(records, keys)
+    rng = np.random.default_rng(5)
+    preds = [_random_pred(rng, m) for _ in range(20)]
+    preds.append(key(0) & ~key(0))        # contradiction
+    want_r, want_c = batch.execute_many(full, preds, num_records=n,
+                                        backend="ref")
+    for cuts in ([60, 61, 60], [181], [1, 90, 90], [32, 149]):
+        assert sum(cuts) == n
+        parts, at = [], 0
+        for c in cuts:
+            parts.append((backends.get_backend("ref").create_index(
+                records[at:at + c], keys), c))
+            at += c
+        rows, counts = batch.execute_many_segments(parts, preds,
+                                                   backend="ref")
+        np.testing.assert_array_equal(np.asarray(rows), np.asarray(want_r))
+        np.testing.assert_array_equal(np.asarray(counts),
+                                      np.asarray(want_c))
+
+
+def test_stored_index_query_many_matches_in_memory(tmp_path):
+    """Acceptance: segment-parallel query_many over a spilled index ==
+    in-memory results for the same predicate trees."""
+    keys = _keys(m=16, hi=48)
+    blocks = _blocks([33, 17, 50, 9], w=8, hi=48)
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(SegmentStore(str(tmp_path)), flush_records=30)
+    for b in blocks:
+        si.append(b)
+    full = _rebuild(blocks, keys)
+    # recover_index serves the FULL stream (segments + WAL tail)
+    rec = recover_index(SegmentStore(str(tmp_path)), keys, backend="ref")
+    np.testing.assert_array_equal(np.asarray(rec.packed), np.asarray(full))
+    # open_index serves the durable prefix, segment-parallel
+    stored = open_index(SegmentStore(str(tmp_path)))
+    assert stored.num_segments >= 2
+    nd = stored.num_records
+    prefix = policy.extract_packed(full, 0, nd)
+    rng = np.random.default_rng(9)
+    preds = [_random_pred(rng, 16) for _ in range(12)]
+    rows, counts = stored.query_many(preds, backend="ref")
+    for i, p in enumerate(preds):
+        r, c = execute(prefix, p, num_records=nd, backend="ref")
+        np.testing.assert_array_equal(np.asarray(rows[i]), np.asarray(r))
+        assert int(counts[i]) == int(c)
+
+
+def test_stored_index_with_tail_serves_full_stream(tmp_path):
+    keys = _keys(m=16, hi=48)
+    blocks = _blocks([33, 17, 50, 9], w=8, hi=48)
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(SegmentStore(str(tmp_path)), flush_records=30)
+    for b in blocks:
+        si.append(b)
+    full = _rebuild(blocks, keys)
+    n = si.num_records
+    store = SegmentStore(str(tmp_path))
+    si2 = StreamingIndexer.restore(store, keys, backend="ref")
+    tc = si2.num_records - store.durable_records
+    tail = (policy.extract_packed(si2.index.packed, store.durable_records,
+                                  tc), tc) if tc else None
+    stored = open_index(store, tail=tail)
+    assert stored.num_records == n
+    rng = np.random.default_rng(10)
+    preds = [_random_pred(rng, 16) for _ in range(12)]
+    rows, counts = stored.query_many(preds, backend="ref")
+    for i, p in enumerate(preds):
+        r, c = execute(full, p, num_records=n, backend="ref")
+        np.testing.assert_array_equal(np.asarray(rows[i]), np.asarray(r))
+        assert int(counts[i]) == int(c)
+
+
+def test_serve_step_accepts_stored_index(tmp_path):
+    from repro.serve.step import make_bitmap_query_step
+    keys = _keys(m=9)
+    blocks = _blocks([20, 30])
+    si = StreamingIndexer(keys, backend="ref")
+    si.attach_store(SegmentStore(str(tmp_path)), flush_records=20)
+    for b in blocks:
+        si.append(b)
+    si.spill()
+    stored = open_index(SegmentStore(str(tmp_path)))
+    step = make_bitmap_query_step(stored, backend="ref")
+    preds = [key(0), key(1) & ~key(2)]
+    rows, counts = step(preds)
+    full = _rebuild(blocks, keys)
+    for i, p in enumerate(preds):
+        r, c = execute(full, p, num_records=50, backend="ref")
+        np.testing.assert_array_equal(np.asarray(rows[i]), np.asarray(r))
+        assert int(counts[i]) == int(c)
+
+
+# ----------------------------------------------------- runtime integration
+def _one_device_mesh():
+    return jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+
+
+def test_multicore_runtime_checkpoints_and_restarts(tmp_path):
+    mesh = _one_device_mesh()
+    keys = jnp.asarray(RNG.integers(0, 256, (8,), dtype=np.int32))
+    rt = MulticoreRuntime(mesh, backend="ref", store_dir=str(tmp_path),
+                          flush_records=20)
+    ticks = [jnp.asarray(RNG.integers(0, 256, (3, 16, 32), dtype=np.int32))
+             for _ in range(3)]
+    for t in ticks:
+        res = rt.run_tick(t, keys, 0.01)
+        # the per-core append loop must not clobber the active-core count
+        assert res.active_cores == rt.scheduler.cores_needed(3, 0.01)
+    want = backends.get_backend("ref").create_index(
+        jnp.concatenate([t.reshape(-1, 32) for t in ticks], axis=0), keys)
+    live = rt.core_indexes(keys)[0]
+    np.testing.assert_array_equal(np.asarray(live.packed), np.asarray(want))
+    # crash + restart: a new runtime over the same store_dir recovers
+    rt2 = MulticoreRuntime(mesh, backend="ref", store_dir=str(tmp_path),
+                           flush_records=20)
+    rec = rt2.core_indexes(keys)[0]
+    assert rec.num_records == 144
+    np.testing.assert_array_equal(np.asarray(rec.packed), np.asarray(want))
+    # explicit checkpoint makes everything durable (WAL tail -> segments)
+    rt2.run_tick(ticks[0], keys, 0.01)
+    rt2.checkpoint()
+    store = SegmentStore(str(tmp_path / "core-0"))
+    assert store.durable_records == 192
+    assert store.replay_wal() == []
+
+
+def test_runtime_measured_energy_calibration():
+    mesh = _one_device_mesh()
+    keys = jnp.asarray(RNG.integers(0, 256, (8,), dtype=np.int32))
+    rt = MulticoreRuntime(mesh, backend="ref", calibrate_energy=True)
+    records = jnp.asarray(RNG.integers(0, 256, (2, 16, 32), dtype=np.int32))
+    paper_bs = rt.scheduler.batch_seconds
+    res = rt.run_tick(records, keys, 0.5)
+    assert res.measured_seconds > 0
+    assert res.measured_mbps > 0
+    assert rt.measured_mbps > 0
+    # the elastic model now runs on the measured device throughput
+    assert rt.scheduler.batch_seconds != paper_bs
+    assert rt.report.active_joules > 0
+    assert rt.report.batches == 2
+    # uncalibrated runtime still measures but keeps the paper clock
+    rt2 = MulticoreRuntime(mesh, backend="ref")
+    res2 = rt2.run_tick(records, keys, 0.5)
+    assert res2.measured_seconds > 0
+    assert rt2.scheduler.batch_seconds == paper_bs
+
+
+# ------------------------------------------------------- data plane
+def test_pipeline_store_backed_index_reloads(tmp_path):
+    from repro.data.pipeline import BitmapIndexedDataset, DataConfig
+    cfg = DataConfig(vocab_size=64, seq_len=8, docs_per_shard=64,
+                     num_shards=2, num_attributes=32)
+    w = (key(0) | key(1)) & ~key(20)
+    ds = BitmapIndexedDataset(cfg, store_dir=str(tmp_path))
+    ids = ds.select(0, where=w)
+    ds2 = BitmapIndexedDataset(cfg, store_dir=str(tmp_path))   # reload
+    np.testing.assert_array_equal(ds2.select(0, where=w), ids)
+    _, idx_a = ds._ensure_shard(0)
+    _, idx_b = ds2._ensure_shard(0)
+    np.testing.assert_array_equal(np.asarray(idx_a.packed),
+                                  np.asarray(idx_b.packed))
+    # plain dataset agrees (the store never changes results)
+    ds3 = BitmapIndexedDataset(cfg)
+    np.testing.assert_array_equal(ds3.select(0, where=w), ids)
+
+
+def test_pipeline_select_many_matches_select(tmp_path):
+    from repro.data.pipeline import BitmapIndexedDataset, DataConfig
+    cfg = DataConfig(vocab_size=64, seq_len=8, docs_per_shard=64,
+                     num_shards=1, num_attributes=32)
+    ds = BitmapIndexedDataset(cfg)
+    preds = [key(3), (key(0) | key(4)) & ~key(17), key(9) & key(20)]
+    many = ds.select_many(0, preds)
+    for p, ids in zip(preds, many):
+        np.testing.assert_array_equal(ds.select(0, where=p), ids)
+    np.testing.assert_array_equal(ds.select(0, include=[9], exclude=[20]),
+                                  ds.select_many(
+                                      0, [key(9) & ~key(20)])[0])
+
+
+# --------------------------------------------------- low-level primitives
+def test_np_splice_matches_engine_splice():
+    m = 6
+    for start, count in [(0, 32), (13, 40), (31, 1), (45, 90)]:
+        bits = RNG.integers(0, 2, (m, count)).astype(np.uint32)
+        pad = -count % 32
+        from repro.kernels import ref
+        block = np.asarray(ref.pack_bits(
+            jnp.asarray(np.pad(bits, ((0, 0), (0, pad))))))
+        total_w = -(-(start + count) // 32)
+        dst = np.zeros((m, total_w), np.uint32)
+        np_splice(dst, start, block, count)
+        want = np.zeros((m, total_w + block.shape[1] + 1), np.uint32)
+        want = np.asarray(policy.splice_packed(
+            jnp.asarray(want), jnp.int32(start),
+            jnp.asarray(block)))[:, :total_w]
+        np.testing.assert_array_equal(dst, want)
+
+
+def test_extract_packed_inverts_splice():
+    m = 4
+    for start, count in [(0, 7), (29, 64), (32, 32), (45, 13)]:
+        total = start + count + 11
+        bits = RNG.integers(0, 2, (m, total)).astype(np.uint32)
+        from repro.kernels import ref
+        pad = -total % 32
+        packed = jnp.asarray(np.asarray(ref.pack_bits(
+            jnp.asarray(np.pad(bits, ((0, 0), (0, pad)))))))
+        got = policy.extract_packed(packed, start, count)
+        dense = np.asarray(ref.unpack_bits(got, count))
+        np.testing.assert_array_equal(dense, bits[:, start:start + count])
+        # tail bits past count are zero
+        full = np.asarray(ref.unpack_bits(got, got.shape[1] * 32))
+        assert full[:, count:].sum() == 0

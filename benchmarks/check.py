@@ -9,9 +9,9 @@ import json
 import sys
 
 REQUIRED = ("engine_planner_query_batched", "engine_streaming_append",
-            "store_spill_recover")
+            "store_spill_recover", "db_facade_overhead")
 EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact_recover", "bitexact",
-                   "allclose")
+                   "allclose", "facade_overhead_ok")
 
 
 def main(path: str = "BENCH_engine.json") -> int:

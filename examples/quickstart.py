@@ -1,62 +1,111 @@
-"""Quickstart: the paper's Fig. 1/Fig. 3 flow end-to-end.
+"""Quickstart: the paper's Fig. 1/Fig. 3 flow through the `repro.db` facade.
 
-Creates a bitmap index over records with the BIC core (CAM match -> buffer
--> transpose), then answers the paper's example query
-"all objects containing A2 AND A4 but NOT A5" with one fused bitwise pass.
+A BIC core turns records into a key-major bitmap index so that
+multi-dimensional queries become streaming bitwise passes.  `repro.db`
+wraps that silicon-shaped core in a database port: a `Schema` names the
+key rows, `col(...)` expressions compile to fused bitmap passes, and one
+`BitmapDB` session owns ingest, durability, and query serving.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
+import os
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
-import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
-from repro.core.bic import BICConfig, BICCore  # noqa: E402
-from repro.engine import key, plan  # noqa: E402
+import repro  # noqa: E402
+from repro.db import col  # noqa: E402
+from repro.engine import key  # noqa: E402
+
+DOMAINS = ["web", "code", "math", "news"]
+LANGS = ["en", "de", "ja"]
+TEMP_EDGES = [-10.0, 0.0, 10.0, 20.0, 30.0, 45.0]
+
+
+def make_rows(rng, n):
+    return {
+        "domain": [DOMAINS[i] for i in rng.integers(0, len(DOMAINS), n)],
+        "lang": [LANGS[i] for i in rng.integers(0, len(LANGS), n)],
+        "temp": rng.uniform(-10, 45, n).round(2).tolist(),
+        "flagged": [bool(b) for b in rng.random(n) < 0.1],
+    }
+
+
+def brute(rows, i):
+    """The quickstart query, evaluated by brute force per record."""
+    return (rows["domain"][i] in ("code", "math")
+            and rows["lang"][i] == "en"
+            and 10.0 <= rows["temp"][i]
+            and not rows["flagged"][i])
 
 
 def main():
     rng = np.random.default_rng(0)
-    # 256 records ("objects"), each holding 32 8-bit attribute words,
-    # indexed by 64 keys — a scaled-up version of the fabricated core.
-    n, w, m = 256, 32, 64
-    records = jnp.asarray(rng.integers(0, 128, (n, w), dtype=np.int32))
-    keys = jnp.arange(m, dtype=jnp.int32)
+    schema = repro.Schema([
+        repro.Column.categorical("domain", DOMAINS),
+        repro.Column.categorical("lang", LANGS),
+        repro.Column.binned("temp", edges=TEMP_EDGES),
+        repro.Column.categorical("flagged", [False, True]),
+    ])
+    print(schema)
 
-    core = BICCore(BICConfig(num_keys=m, num_records=n, words_per_record=w))
-    index = core.create(records, keys)
-    print(f"bitmap index: {index.num_keys} keys x {index.num_records} "
-          f"records, packed {index.packed.shape} uint32")
+    # ---- ingest: structured rows -> streaming bitmap index -------------
+    db = repro.BitmapDB(schema)
+    n = 4096
+    rows = make_rows(rng, n)
+    db.ingest(rows)
+    print(f"ingested {db.num_records} records over {db.num_keys} key rows")
 
-    # "find all objects containing A2 and A4, but not A5" (paper §II-A)
-    result, count = core.query(index, include=[2, 4], exclude=[5])
-    hits = [j for j in range(n)
-            if (int(result[j // 32]) >> (j % 32)) & 1]
-    print(f"query A2 & A4 & ~A5 -> {int(count)} objects: {hits[:10]}"
-          f"{' ...' if len(hits) > 10 else ''}")
+    # ---- query: typed expressions compile to fused bitmap passes -------
+    q = (col("domain").isin(["code", "math"]) & (col("lang") == "en")
+         & (col("temp") >= 10.0) & ~(col("flagged") == True))  # noqa: E712
+    res = db.query(q)
+    want = [i for i in range(n) if brute(rows, i)]
+    assert list(res.ids) == want, "bitmap query must match brute force"
+    print(f"query code|math & en & temp>=10 & ~flagged -> {res.count} "
+          f"records: {[int(i) for i in res.ids[:8]]} ... "
+          "(verified by brute force)")
 
-    # cross-check against brute force
-    rec = np.asarray(records)
-    brute = [j for j in range(n)
-             if 2 in rec[j] and 4 in rec[j] and 5 not in rec[j]]
-    assert hits == brute, "bitmap query must match brute force"
-    print("verified against brute-force scan.")
+    # raw integer key rows still work (the engine predicate surface)
+    k = schema.key_of("domain", "code")
+    res2 = db.query(key(k) & ~key(schema.key_of("flagged", True)))
+    print(f"raw predicate key({k}) & ~flagged -> {res2.count} records")
 
-    # arbitrary boolean trees go through the engine's query planner:
-    # "(A2 or A7) and A4, but not A5" compiles to fused bitmap passes
-    pred = (key(2) | key(7)) & key(4) & ~key(5)
-    pl = plan(pred)
-    result, count = core.query(index, where=pred)
-    hits = [j for j in range(n) if (int(result[j // 32]) >> (j % 32)) & 1]
-    print(f"planner query (A2|A7) & A4 & ~A5 -> {int(count)} objects "
-          f"in {pl.num_passes} fused passes (plan shape {pl.shape})")
-    brute = [j for j in range(n)
-             if (2 in rec[j] or 7 in rec[j]) and 4 in rec[j]
-             and 5 not in rec[j]]
-    assert hits == brute, "planner query must match brute force"
-    print("planner query verified against brute-force scan.")
+    # ---- stats feed the planner's cheapest-first clause ordering -------
+    st = db.stats
+    labels = [schema.key_label(i) for i in range(3)]
+    print(f"per-key selectivity stats: {labels} -> {st.counts[:3]}")
+
+    # ---- durability: spill to a store, crash, recover ------------------
+    with tempfile.TemporaryDirectory() as root:
+        path = os.path.join(root, "idx")
+        durable = repro.BitmapDB(schema, path=path, spill_records=1024)
+        cut = n - 500                   # last 500 stay under the threshold
+        durable.ingest({k2: v[:cut] for k2, v in rows.items()})
+        durable.append({k2: v[cut:] for k2, v in rows.items()})
+        segs = len(durable.store.segments)
+        wal_blocks = len(durable.store.replay_wal())
+        assert wal_blocks, "the final sub-threshold block must be WAL-only"
+        # "crash": reopen from disk — manifest + WAL replay, bit-identical
+        recovered = repro.open(path)
+        assert recovered.num_records == n
+        assert list(recovered.query(q).ids) == want
+        print(f"recovered {recovered.num_records} records from {segs} "
+              f"segments + a {wal_blocks}-block WAL tail; query results "
+              "bit-identical")
+
+        # ---- serving: one step function over the bucketed executor ----
+        step = recovered.serve_step()
+        batch = [q, col("lang") == "de", key(k),
+                 col("temp").between(0, 20) & (col("domain") == "web")]
+        rows_out, counts = step(batch)
+        print(f"served a {len(batch)}-query batch in bucketed dispatches: "
+              f"counts={[int(c) for c in counts]}")
+
+    print("quickstart OK")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,7 @@ import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 
 from repro.core.bic import BICConfig, BICCore  # noqa: E402
+from repro.engine.planner import key  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 from repro.models.model import init_params  # noqa: E402
 from repro.serve.step import greedy_generate  # noqa: E402
@@ -38,7 +39,7 @@ def main():
                             words_per_record=4))
     index = bic.create(jnp.asarray(tags), jnp.arange(n_tags, dtype=jnp.int32))
     # schedule: premium (tag 2) non-batch-exempt (not tag 7) requests first
-    row, count = bic.query(index, include=[2], exclude=[7])
+    row, count = bic.query(index, where=key(2) & ~key(7))
     ready = [j for j in range(n_req) if (int(row[j // 32]) >> (j % 32)) & 1]
     print(f"scheduler: {int(count)} premium requests selected via bitmap "
           f"query: {ready[:8]}...")

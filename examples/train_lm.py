@@ -12,6 +12,7 @@ import sys
 sys.path.insert(0, "src")
 
 from repro.data.pipeline import BitmapIndexedDataset, DataConfig  # noqa: E402
+from repro.engine.planner import key  # noqa: E402
 from repro.models.config import ModelConfig  # noqa: E402
 from repro.optim.adamw import OptimConfig  # noqa: E402
 from repro.train.loop import LoopConfig, train_loop  # noqa: E402
@@ -38,7 +39,7 @@ def main():
                       docs_per_shard=512, num_shards=4, num_attributes=32)
     ds = BitmapIndexedDataset(dcfg)
     # bitmap-query data selection: domain==3 AND quality==18, NOT flag 25
-    sel = dict(include=[3, 18], exclude=[25])
+    sel = dict(where=key(3) & key(18) & ~key(25))
     n_sel = sum(len(ds.select(s, **sel)) for s in range(dcfg.num_shards))
     print(f"bitmap query selected {n_sel} / "
           f"{dcfg.num_shards * dcfg.docs_per_shard} documents")

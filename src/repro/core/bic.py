@@ -6,10 +6,12 @@ multi-dimensional queries are bitwise row operations.  The paper's fabricated
 core used M=8 keys, N=16 records, W=32 8-bit words per record
 (``PaperConfig`` below); this module generalizes all three.
 
-Execution is delegated to :mod:`repro.engine` — the backend registry owns
-the padding/sentinel policy, the query planner compiles predicate trees to
-fused kernel passes.  ``BICCore.create`` / ``BICCore.query`` are thin
-compatibility wrappers over that layer:
+Execution is delegated through the :mod:`repro.db` facade — querying an
+index wraps it in a read-only ``BitmapDB`` session, so ``BICCore.query`` /
+``query_many`` serve through exactly the path production uses (bucketed
+batch executors; the legacy ``include=``/``exclude=`` lists go through the
+facade's deprecation shim, byte-identical).  ``BICCore.create`` still
+dispatches the backend registry directly:
 
   * ``backend="pallas"`` — the TPU kernels (interpret-mode on CPU).
   * ``backend="ref"``    — the pure-jnp oracle (differential tests).
@@ -23,7 +25,6 @@ from typing import Literal, Sequence
 import jax
 
 from repro.engine import backends as _backends
-from repro.engine import batch as _batch
 from repro.engine import planner as _planner
 from repro.engine.policy import PACK, BitmapIndex
 
@@ -64,38 +65,43 @@ class BICCore:
         return BitmapIndex(backend.create_index(records, keys),
                            num_records=records.shape[0])
 
+    def session(self, index: BitmapIndex):
+        """Wrap ``index`` in a read-only :class:`repro.db.BitmapDB` query
+        session (the facade every query below routes through)."""
+        from repro import db as _db
+        return _db.BitmapDB.from_index(index, backend=self.config.backend)
+
     def query(self, index: BitmapIndex, include: Sequence[int] = (),
               exclude: Sequence[int] = (), *,
               where: _planner.Pred | None = None
               ) -> tuple[jax.Array, jax.Array]:
         """The paper's example: ``query(idx, include=[2, 4], exclude=[5])``
-        answers "all objects containing A2 and A4 but not A5".
+        answers "all objects containing A2 and A4 but not A5" (the legacy
+        key-list surface — a deprecation shim in :mod:`repro.db` keeps it
+        byte-identical).
 
         ``where`` accepts an arbitrary AND/OR/NOT predicate tree instead,
-        e.g. ``query(idx, where=(key(2) | key(7)) & ~key(5))`` — the engine
-        planner compiles it to fused bitmap-kernel passes.
+        e.g. ``query(idx, where=(key(2) | key(7)) & ~key(5))``, or a
+        :mod:`repro.db` schema expression when you hold one.
 
         Returns (packed result row, matching-object count)."""
+        from repro import db as _db
         if where is None:
-            where = _planner.from_include_exclude(include, exclude)
+            where = _db.include_exclude_pred(include, exclude)
         elif include or exclude:
             raise ValueError("pass either include/exclude or where=, not both")
-        return _planner.execute(index.packed, where,
-                                num_records=index.num_records,
-                                backend=self.config.backend)
+        return self.session(index).query(where).raw
 
     def query_many(self, index: BitmapIndex,
                    predicates: Sequence[_planner.Pred]
                    ) -> tuple[jax.Array, jax.Array]:
         """Serve a whole batch of ``where=``-style predicate trees (or
-        pre-built plans) in a handful of vmapped dispatches — the engine
+        pre-built plans) in a handful of vmapped dispatches — the facade
         buckets plans by shape instead of looping ``query`` per tree.
 
         Returns (rows (Q, Nw) uint32, counts (Q,) int32) in input order,
         bit-identical to calling :meth:`query` per predicate."""
-        return _batch.execute_many(index.packed, predicates,
-                                   num_records=index.num_records,
-                                   backend=self.config.backend)
+        return self.session(index).serve_step()(predicates)
 
     def batch_create(self, records: jax.Array, keys: jax.Array) -> BitmapIndex:
         """Index B batches of records with shared keys by flattening the

@@ -1,32 +1,41 @@
 """Bitmap-indexed data pipeline — the paper's technique as a first-class
-feature of the training stack.
+feature of the training stack, served through the :mod:`repro.db` facade.
 
-Documents carry attributes (domain, language, quality bucket, dedup key,
-...).  At ingest, the BIC core indexes each corpus shard: every attribute
-value becomes one key, every document one record, and the result is a
-key-major packed bitmap.  Data selection for training ("code documents, high
-quality, not flagged") is then a streaming bitwise query — the exact
-economics the paper builds silicon for, applied to the data plane of an LM
-training run.
+Documents carry attributes (domain, language, quality bucket, tags ...).
+At ingest, each corpus shard streams into a per-shard
+:class:`repro.db.BitmapDB`: every attribute value is one schema key, every
+document one record.  Data selection for training ("code documents, high
+quality, not flagged") is then a declarative query — either the typed DSL
+(``col("domain").isin([0, 1]) & (col("quality") == 2)``) or a raw engine
+predicate tree — executed as streaming bitwise passes, the exact economics
+the paper builds silicon for, applied to the data plane of an LM training
+run.
 
 The corpus itself is synthetic (the assignment ships no data), but the
 pipeline is real: sharded ingest, BIC indexing, query-driven sampling,
-deterministic restart (the sampler state is part of the checkpoint).
+deterministic restart (the sampler state is part of the checkpoint), and
+``store_dir=`` durability (per-shard ``BitmapDB`` stores reload
+CRC-verified instead of re-indexing the corpus).
 """
 from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Iterator, Sequence
+from typing import Iterator, Sequence, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
+import jax.numpy as jnp
+
 from repro.core.bic import BICCore, BICConfig, BitmapIndex
-from repro.engine.planner import Pred, from_include_exclude
+from repro.db.expr import Expr
+from repro.db.schema import Column, Schema
+from repro.engine.planner import Pred
 
 ATTR_WORDS = 8        # attribute words per document "record"
+
+#: a selection query: a typed repro.db expression or a raw predicate tree
+Query = Union[Expr, Pred]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +46,24 @@ class DataConfig:
     num_shards: int = 4
     num_attributes: int = 64        # distinct attribute values (BIC keys)
     seed: int = 0
+
+
+def attribute_schema(cfg: DataConfig) -> Schema | None:
+    """The corpus attribute layout as a :class:`repro.db.Schema`: domains
+    own keys 0-7, languages 8-15, quality buckets 16-23, and free-form
+    tags the remaining rows — matching the raw key-id words
+    :class:`SyntheticCorpus` emits, so encoded shards ingest directly.
+    Returns None when ``num_attributes`` leaves no room for the tag rows
+    (the dataset then runs a raw key-addressed session; the legacy
+    integer-key queries keep working either way)."""
+    if cfg.num_attributes <= 24:
+        return None
+    return Schema([
+        Column.categorical("domain", range(8)),
+        Column.categorical("lang", range(8)),
+        Column.categorical("quality", range(8)),
+        Column.categorical("tag", range(24, cfg.num_attributes)),
+    ])
 
 
 class SyntheticCorpus:
@@ -68,12 +95,13 @@ class SyntheticCorpus:
 
 
 class BitmapIndexedDataset:
-    """Corpus shards + per-shard bitmap indexes + query-driven batching.
+    """Corpus shards + per-shard :class:`repro.db.BitmapDB` sessions +
+    query-driven batching.
 
-    ``store_dir`` makes the per-shard indexes durable: each shard's packed
-    index persists as a :class:`repro.store.SegmentStore` segment under
-    ``<store_dir>/shard-<id>``, so a restarted pipeline reloads
-    (CRC-verified) instead of re-running the BIC build over the corpus."""
+    ``store_dir`` makes the per-shard indexes durable: each shard's index
+    persists as a segment store under ``<store_dir>/shard-<id>``, so a
+    restarted pipeline reopens (CRC-verified) through ``repro.db.open``
+    instead of re-running the BIC build over the corpus."""
 
     def __init__(self, cfg: DataConfig, bic: BICCore | None = None, *,
                  store_dir: str | None = None):
@@ -83,83 +111,97 @@ class BitmapIndexedDataset:
             num_keys=cfg.num_attributes,
             num_records=cfg.docs_per_shard,
             words_per_record=ATTR_WORDS))
+        self.schema = attribute_schema(cfg)
         self.store_dir = store_dir
-        self._shards: dict[int, tuple[np.ndarray, BitmapIndex]] = {}
+        self._shards: dict[int, tuple[np.ndarray, "object"]] = {}
 
-    def _load_or_index(self, attrs: np.ndarray,
-                       keys: jax.Array, shard_id: int) -> BitmapIndex:
+    def _shard_path(self, shard_id: int) -> str:
+        return os.path.join(self.store_dir, f"shard-{shard_id:04d}")
+
+    def _open_or_ingest(self, attrs: np.ndarray, shard_id: int):
+        """One durable (or in-memory) BitmapDB per shard."""
+        from repro import db as _db
+        kw = dict(backend=self.bic.config.backend)
+        if self.schema is None:
+            kw["num_keys"] = self.cfg.num_attributes
         if self.store_dir is None:
-            return self.bic.create(jnp.asarray(attrs), keys)
+            db = _db.BitmapDB(self.schema, **kw)
+            db.append_encoded(attrs)
+            return db
         from repro.store import SegmentStore
-        st = SegmentStore(os.path.join(self.store_dir,
-                                       f"shard-{shard_id:04d}"))
+        path = self._shard_path(shard_id)
+        st = SegmentStore(path)
         try:
-            if st.durable_records == self.cfg.docs_per_shard:
-                if st.num_keys != self.cfg.num_attributes:
-                    raise ValueError(
-                        f"store shard-{shard_id:04d} holds "
-                        f"{st.num_keys}-key segments but the config says "
-                        f"{self.cfg.num_attributes} attributes — stale "
-                        "store_dir?")
-                packed, n = st.load_packed()
-                return BitmapIndex(jnp.asarray(packed), n)
-            if st.durable_records:
+            populated = bool(st.durable_records or st.replay_wal())
+            if populated and st.num_keys is not None \
+                    and st.num_keys != self.cfg.num_attributes:
                 raise ValueError(
-                    f"store shard-{shard_id:04d} holds "
-                    f"{st.durable_records} records but the config says "
-                    f"{self.cfg.docs_per_shard} — stale store_dir?")
-            index = self.bic.create(jnp.asarray(attrs), keys)
-            st.ensure_keys(np.asarray(jax.device_get(keys)))
-            st.write_segment(np.asarray(jax.device_get(index.packed)),
-                             index.num_records, 0)
-            return index
+                    f"store shard-{shard_id:04d} holds {st.num_keys}-key "
+                    f"segments but the config says "
+                    f"{self.cfg.num_attributes} attributes — stale "
+                    "store_dir?")
         finally:
             st.close()
+        if populated:
+            db = _db.BitmapDB.open(path, self.schema, **kw)
+            if db.num_records != self.cfg.docs_per_shard:
+                raise ValueError(
+                    f"store shard-{shard_id:04d} holds {db.num_records} "
+                    f"records but the config says "
+                    f"{self.cfg.docs_per_shard} — stale store_dir?")
+            return db
+        db = _db.BitmapDB(self.schema, path=path, spill_records=None, **kw)
+        db.append_encoded(attrs)
+        db.snapshot()                     # one committed segment per shard
+        return db
 
-    def _ensure_shard(self, shard_id: int):
+    def _ensure_db(self, shard_id: int):
         if shard_id not in self._shards:
             tokens, attrs = self.corpus.shard(shard_id)
-            keys = jnp.arange(self.cfg.num_attributes, dtype=jnp.int32)
-            index = self._load_or_index(attrs, keys, shard_id)
-            self._shards[shard_id] = (tokens, index)
+            self._shards[shard_id] = (tokens,
+                                      self._open_or_ingest(attrs, shard_id))
         return self._shards[shard_id]
+
+    def _ensure_shard(self, shard_id: int) -> tuple[np.ndarray, BitmapIndex]:
+        """(tokens, live BitmapIndex) — the legacy accessor shape."""
+        tokens, db = self._ensure_db(shard_id)
+        return tokens, db.index
+
+    def db(self, shard_id: int):
+        """The shard's :class:`repro.db.BitmapDB` session (for direct DSL
+        queries, stats, or serving)."""
+        return self._ensure_db(shard_id)[1]
 
     def select(self, shard_id: int, include: Sequence[int] = (),
                exclude: Sequence[int] = (), *,
-               where: Pred | None = None) -> np.ndarray:
+               where: Query | None = None) -> np.ndarray:
         """Document ids in ``shard_id`` matching the attribute query.
 
-        ``include``/``exclude`` express AND-of-literals; ``where`` accepts an
-        arbitrary predicate tree, e.g.
-        ``where=(key(0) | key(1)) & key(18) & ~key(30)`` for
-        "(domain 0 or domain 1) and quality bucket 2 and not tag 30" — the
-        engine planner fuses it into minimal bitmap passes."""
+        ``where`` accepts a typed expression over :func:`attribute_schema`
+        (``col("domain").isin([0, 1]) & (col("quality") == 2) &
+        ~(col("tag") == 30)``) or a raw predicate tree over integer key
+        rows; ``include``/``exclude`` express the legacy AND-of-literals
+        (kept working through the :mod:`repro.db` deprecation shim)."""
+        from repro import db as _db
         if where is None:
-            where = from_include_exclude(include, exclude)
+            where = _db.include_exclude_pred(include, exclude)
         elif include or exclude:
             raise ValueError("pass either include/exclude or where=, "
                              "not both")
         return self.select_many(shard_id, [where])[0]
 
     def select_many(self, shard_id: int,
-                    wheres: Sequence[Pred]) -> list[np.ndarray]:
-        """Serve a burst of predicate selections against one shard in a
-        handful of bucketed dispatches (``engine.batch`` plan-shape
-        bucketing) instead of one planner dispatch per predicate — the
-        data-plane twin of ``BICCore.query_many``.  Returns the matching
-        document-id array per predicate, in input order."""
-        tokens, index = self._ensure_shard(shard_id)
-        rows, _ = self.bic.query_many(index, list(wheres))
-        bits = np.asarray(jax.device_get(rows))
-        out = []
-        for qi in range(bits.shape[0]):
-            ids = np.flatnonzero(
-                np.unpackbits(bits[qi].view(np.uint8), bitorder="little"))
-            out.append(ids[ids < tokens.shape[0]])
-        return out
+                    wheres: Sequence[Query]) -> list[np.ndarray]:
+        """Serve a burst of selections against one shard in a handful of
+        bucketed dispatches (one lazily shared ``query_many`` batch, one
+        bulk device-to-host transfer) instead of one planner dispatch —
+        and one device sync — per query.  Returns the matching
+        document-id array per query, in input order."""
+        db = self.db(shard_id)
+        return db.query_many(list(wheres)).all_ids()
 
     def batches(self, batch_size: int, include: Sequence[int] = (),
-                exclude: Sequence[int] = (), *, where: Pred | None = None,
+                exclude: Sequence[int] = (), *, where: Query | None = None,
                 seed: int = 0, start_step: int = 0) -> Iterator[dict]:
         """Infinite deterministic batch stream over the selected subset.
 
@@ -169,7 +211,7 @@ class BitmapIndexedDataset:
         pools = []
         for s in range(self.cfg.num_shards):
             ids = self.select(s, include, exclude, where=where)
-            tokens, _ = self._ensure_shard(s)
+            tokens, _ = self._ensure_db(s)
             if len(ids):
                 pools.append(tokens[ids])
         if not pools:

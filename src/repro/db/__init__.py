@@ -1,0 +1,70 @@
+"""``repro.db`` — one schema-aware database facade over engine + store +
+serve.
+
+The paper's BIC core is valuable because it hides packing, carry-splicing,
+and power-mode detail behind one simple ingest/query port; this package is
+that port for the reproduction stack (the same argument bulk bitwise
+engines make: bulk operators get adopted through a small declarative
+interface, not per-pass plumbing).  Four pieces:
+
+  * :class:`Schema` / :class:`Column` — named, typed columns (categorical
+    values, binned numerics) mapped onto bitmap-index key rows.
+  * :func:`col` — the typed expression DSL (``col("city") == "SF"``,
+    ``col("temp").between(10, 25)``, ``col("tag").isin([...])``, composed
+    with ``& | ~``) lowering to engine predicate trees.
+  * :class:`BitmapDB` — the session object: streaming ingest with
+    auto-spill durability, selectivity-stats-ordered planning, lazy
+    :class:`Result` handles, crash recovery via :func:`open`, and
+    ``serve_step()`` wrapping the bucketed batch executor.
+  * :func:`include_exclude_pred` — the deprecation shim keeping legacy
+    ``include=``/``exclude=`` key-list callers byte-identical.
+
+Everything below (``repro.engine``, ``repro.store``, ``repro.serve``)
+stays importable on its own; this facade is the documented way in::
+
+    import repro
+
+    db = repro.BitmapDB(schema, path="/data/idx")
+    db.ingest({"city": [...], "temp": [...]})
+    hot = db.query((repro.col("city") == "SF") &
+                   repro.col("temp").between(20, 30))
+    print(hot.count, hot.ids[:10])
+
+Symbols resolve lazily (the :mod:`repro.engine` idiom) so importing
+``repro.db`` never drags jax-heavy modules in before first use.
+"""
+from __future__ import annotations
+
+import importlib
+
+_EXPORTS = {
+    # schema
+    "Schema": "schema", "Column": "schema",
+    # expression DSL
+    "col": "expr", "Expr": "expr", "lower": "expr",
+    # results
+    "Result": "result", "LazyBatch": "result", "ResultBatch": "result",
+    # session
+    "BitmapDB": "session", "include_exclude_pred": "session",
+    "SCHEMA_FILE": "session",
+}
+_ALIASES = {"open": ("session", "open_db")}
+
+__all__ = sorted(_EXPORTS) + sorted(_ALIASES) + ["schema", "expr",
+                                                 "result", "session"]
+
+
+def __getattr__(name):
+    if name in ("schema", "expr", "result", "session"):
+        return importlib.import_module(f"{__name__}.{name}")
+    if name in _ALIASES:
+        mod, attr = _ALIASES[name]
+        return getattr(importlib.import_module(f"{__name__}.{mod}"), attr)
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+    return getattr(importlib.import_module(f"{__name__}.{mod}"), name)
+
+
+def __dir__():
+    return __all__

@@ -1,0 +1,386 @@
+"""`BitmapDB` — the one schema-aware session object over engine + store.
+
+The paper's silicon hides packing, carry-splicing, and power-mode detail
+behind a simple ingest/query port; this class is that port for the whole
+reproduction stack.  One object owns:
+
+  * **ingest** — :meth:`ingest` / :meth:`append` encode structured rows
+    through the :class:`repro.db.Schema` and stream them into a
+    :class:`repro.engine.runtime.StreamingIndexer` (jitted shift/carry
+    splice, no rebuild); :meth:`append_encoded` takes pre-encoded key-word
+    records directly (the data-pipeline path).
+  * **durability** — opened with ``path=``, every append is WAL-logged
+    before the in-memory splice and the tail auto-spills as immutable
+    segments past ``spill_records`` (:mod:`repro.store`); :meth:`snapshot`
+    force-spills, and :func:`BitmapDB.open` recovers a crashed session
+    bit-identically from manifest + WAL (the schema persists as
+    ``SCHEMA.json`` next to the segments).
+  * **query** — :meth:`query` / :meth:`query_many` accept DSL expressions
+    (``col("city") == "SF"``), raw engine predicates (``key(3) & ~key(5)``),
+    or pre-built plans; lowering and planning cache per expression, plans
+    order their DNF clauses by the session's live per-key selectivity
+    stats (:class:`repro.engine.planner.KeyStats`), and execution runs
+    through the engine's bucketed batch executors.  Results come back as
+    lazy :class:`repro.db.Result` handles.
+  * **serving** — :meth:`serve_step` wraps the bucketed batch executor as
+    a raw ``(rows, counts)`` step function for serving loops
+    (:mod:`repro.serve.step` routes through it).
+
+Read-only sessions wrap an existing index: :meth:`BitmapDB.from_index`
+accepts an in-memory :class:`repro.engine.policy.BitmapIndex` or a
+segment-backed :class:`repro.store.StoredIndex` (served segment-parallel,
+stacked into one vmapped dispatch when word counts are uniform).
+"""
+from __future__ import annotations
+
+import os
+import warnings
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.db import expr as expr_mod
+from repro.db.result import LazyBatch, Result, ResultBatch
+from repro.db.schema import Schema
+from repro.engine import backends, batch as engine_batch, planner, policy
+from repro.engine.runtime import StreamingIndexer
+
+SCHEMA_FILE = "SCHEMA.json"
+
+
+def include_exclude_pred(include: Sequence[int] = (),
+                         exclude: Sequence[int] = ()) -> planner.Pred:
+    """Deprecation shim for the legacy ``include=``/``exclude=`` call
+    surface: AND of positive/negated key-row literals, byte-identical to
+    what those callers always got.  Callers that passed NEITHER list get
+    the original empty-query ValueError, no warning — they used nothing
+    deprecated."""
+    if include or exclude:
+        warnings.warn(
+            "include=/exclude= key lists are deprecated; use a repro.db "
+            "expression (col(...) == value) or an engine predicate "
+            "(key(i) & ~key(j))", DeprecationWarning, stacklevel=3)
+    return planner.from_include_exclude(include, exclude)
+
+
+def _popcounts(packed) -> np.ndarray:
+    """Exact per-key set-bit counts of a packed (M, W) array."""
+    arr = np.asarray(jax.device_get(packed))
+    if arr.size == 0:
+        return np.zeros((arr.shape[0],), np.int64)
+    return np.bitwise_count(arr).sum(axis=1, dtype=np.int64)
+
+
+class BitmapDB:
+    """One bitmap-index database session (see module docstring)."""
+
+    def __init__(self, schema: Schema | None = None, *,
+                 num_keys: int | None = None, path: str | None = None,
+                 backend: str = "auto", spill_records: int | None = 4096,
+                 capacity_words: int = 16, _restore: bool = False):
+        if schema is None and num_keys is None:
+            raise ValueError("BitmapDB needs a Schema (or num_keys= for a "
+                             "raw key-addressed session)")
+        if schema is not None and num_keys is not None \
+                and num_keys != schema.num_keys:
+            raise ValueError(f"num_keys={num_keys} contradicts the schema "
+                             f"({schema.num_keys} keys)")
+        self.schema = schema
+        self.backend = backends.resolve_backend(backend)
+        self.path = path
+        m = schema.num_keys if schema is not None else int(num_keys)
+        self._keys = jnp.arange(m, dtype=jnp.int32)
+        self._index = None                     # read-only sessions only
+        self._counts = np.zeros((m,), np.int64)
+        self._plans: dict = {}
+        self._plans_by_id: dict = {}       # id(expr) fast path (see _plan_for)
+        self._stats_cache: tuple[int, planner.KeyStats] | None = None
+        self._view_cache = None            # (buf, n, BitmapIndex) snapshot
+        if path is None:
+            self._si = StreamingIndexer(self._keys, backend=self.backend,
+                                        capacity_words=capacity_words)
+            return
+        from repro.store import SegmentStore
+        store = SegmentStore(path)
+        self._persist_schema(path)
+        if _restore:
+            self._si = StreamingIndexer.restore(
+                store, self._keys, backend=self.backend,
+                capacity_words=capacity_words, flush_records=spill_records)
+            self._counts = _popcounts(self._si.index.packed)
+            return
+        self._si = StreamingIndexer(self._keys, backend=self.backend,
+                                    capacity_words=capacity_words)
+        try:
+            self._si.attach_store(store, flush_records=spill_records)
+        except ValueError as e:
+            raise ValueError(
+                f"{path} already holds a durable index; resume it with "
+                f"repro.db.open({path!r}) instead of BitmapDB(path=...)"
+            ) from e
+
+    # ------------------------------------------------------------ open/wrap
+    @classmethod
+    def open(cls, path: str, schema: Schema | None = None, *,
+             num_keys: int | None = None, backend: str = "auto",
+             spill_records: int | None = 4096,
+             capacity_words: int = 16) -> "BitmapDB":
+        """Recover a durable session from ``path``: committed segments +
+        surviving WAL blocks replay into a live index bit-identical to the
+        pre-crash one, with per-key stats recounted exactly from the
+        recovered packed rows.  The schema is loaded from the persisted
+        ``SCHEMA.json`` when not given (and verified against it when it
+        is); ``num_keys=`` opens a raw key-addressed store that never had
+        one."""
+        sf = os.path.join(path, SCHEMA_FILE)
+        if schema is None and os.path.exists(sf):
+            with open(sf) as f:           # noqa: PLW1514 (ascii json)
+                schema = Schema.from_json(f.read())
+        if schema is None and num_keys is None:
+            raise FileNotFoundError(
+                f"{sf} not found — pass schema= or num_keys= to open a "
+                "store created without a persisted schema")
+        return cls(schema, num_keys=None if schema is not None else num_keys,
+                   path=path, backend=backend, spill_records=spill_records,
+                   capacity_words=capacity_words, _restore=True)
+
+    @classmethod
+    def from_index(cls, index, schema: Schema | None = None, *,
+                   backend: str = "auto") -> "BitmapDB":
+        """Wrap an existing index as a READ-ONLY query session: an
+        in-memory :class:`repro.engine.policy.BitmapIndex` or a
+        segment-backed :class:`repro.store.StoredIndex` (served
+        segment-parallel).  Appends raise; stats come from exact popcounts
+        on first use."""
+        m = int(index.num_keys)
+        if schema is not None and schema.num_keys != m:
+            raise ValueError(f"index has {m} key rows but the schema "
+                             f"defines {schema.num_keys}")
+        db = cls(schema, num_keys=m if schema is None else None,
+                 backend=backend)
+        db._si = None
+        db._index = index
+        db._counts = None                  # lazily popcounted
+        return db
+
+    # ----------------------------------------------------------- properties
+    @property
+    def num_keys(self) -> int:
+        return int(self._keys.shape[0])
+
+    @property
+    def num_records(self) -> int:
+        if self._si is not None:
+            return self._si.num_records
+        return int(self._index.num_records)
+
+    @property
+    def index(self) -> policy.BitmapIndex:
+        """The live contiguous index (read-only StoredIndex sessions stay
+        segment-parallel — materialize explicitly if you must)."""
+        if self._si is not None:
+            return self._si.index
+        if isinstance(self._index, policy.BitmapIndex):
+            return self._index
+        raise TypeError(
+            "this session serves a segment-backed StoredIndex; use "
+            "query()/query_many(), or index.to_bitmap_index() to "
+            "materialize")
+
+    @property
+    def store(self):
+        return self._si.store if self._si is not None else None
+
+    @property
+    def stats(self) -> planner.KeyStats:
+        """Live per-key set-bit counts (exact) as planner cardinality
+        estimates."""
+        if self._counts is None:           # read-only: popcount on demand
+            idx = self._index
+            if hasattr(idx, "parts"):      # StoredIndex
+                c = np.zeros((self.num_keys,), np.int64)
+                for part, _ in idx.parts:
+                    c += _popcounts(part)
+                self._counts = c
+            else:
+                self._counts = _popcounts(idx.packed)
+        n = self.num_records
+        if self._stats_cache is None or self._stats_cache[0] != n:
+            self._stats_cache = (n, planner.KeyStats(
+                tuple(int(c) for c in self._counts), n))
+        return self._stats_cache[1]
+
+    # --------------------------------------------------------------- ingest
+    def ingest(self, rows) -> int:
+        """Bulk-load structured rows (see :meth:`repro.db.Schema.encode`
+        for accepted shapes); returns the new total record count."""
+        return self.append(rows)
+
+    def append(self, rows) -> int:
+        """Stream structured rows into the live index (auto-spilling past
+        the ``spill_records`` threshold when opened with ``path=``)."""
+        if self.schema is None:
+            raise ValueError("this session has no Schema; use "
+                             "append_encoded with raw key-word records")
+        return self.append_encoded(self.schema.encode(rows))
+
+    def append_encoded(self, records) -> int:
+        """Stream pre-encoded key-word records (N, W): each int word is a
+        global key id (words outside [0, num_keys) match no key)."""
+        if self._si is None:
+            raise RuntimeError("read-only session (from_index) — open a "
+                               "BitmapDB with a schema/path to ingest")
+        records = jnp.asarray(records, jnp.int32)
+        if records.ndim != 2:
+            raise ValueError(f"records must be (N, W), got "
+                             f"{records.shape}")
+        if records.shape[0]:
+            block = backends.get_backend(self.backend).create_index(
+                records, self._keys)
+            self._si.append_indexed(records, block)
+            self._counts += _popcounts(block)
+        return self.num_records
+
+    # ----------------------------------------------------------- durability
+    def snapshot(self) -> None:
+        """Force-spill the in-memory tail as an immutable segment (atomic
+        manifest commit); a no-op when nothing new arrived."""
+        if self._si is None or self._si.store is None:
+            raise RuntimeError("no store attached — open the BitmapDB "
+                               "with path= to make it durable")
+        self._si.spill()
+
+    def _persist_schema(self, path: str) -> None:
+        if self.schema is None:
+            return
+        from repro.store import format as fmt
+        os.makedirs(path, exist_ok=True)
+        sf = os.path.join(path, SCHEMA_FILE)
+        if os.path.exists(sf):
+            with open(sf) as f:
+                stored = Schema.from_json(f.read())
+            if stored != self.schema:
+                raise ValueError(
+                    f"{path} was created with a different schema "
+                    f"({stored!r}); one store persists ONE schema")
+        else:
+            fmt.write_bytes_atomic(sf, self.schema.to_json().encode())
+
+    # ---------------------------------------------------------------- query
+    #: id-cache entries above this are dropped wholesale — bounds memory
+    #: for workloads that build every expression object fresh (the
+    #: value-keyed plan cache still dedups those).
+    _ID_CACHE_LIMIT = 65536
+
+    def _plan_for(self, q):
+        # serving loops re-submit the same expression OBJECTS: an identity
+        # hit skips even the value-hash of a nested tree.  Entries keep a
+        # strong reference to the query, so a cached id can never be a
+        # recycled object's — a hit IS the same object.
+        hit = self._plans_by_id.get(id(q))
+        if hit is not None:
+            return hit[1]
+        if isinstance(q, (planner.QueryPlan, planner.FactoredPlan,
+                          planner.CompositePlan)):
+            return q
+        pl = self._plans.get(q)
+        if pl is None:
+            pred = expr_mod.lower(q, self.schema)
+            planner.check_key_range(planner.key_indices(pred),
+                                    self.num_keys)
+            # stats ordering is opportunistic: live sessions maintain
+            # counts incrementally; a read-only wrapper only pays the
+            # popcount if the caller already asked for .stats
+            stats = self.stats if self._counts is not None else None
+            pl = planner.plan(pred, stats=stats)
+            self._plans[q] = pl
+        if len(self._plans_by_id) >= self._ID_CACHE_LIMIT:
+            self._plans_by_id.clear()
+        self._plans_by_id[id(q)] = (q, pl)
+        return pl
+
+    def replan(self) -> None:
+        """Drop the per-expression plan cache so future queries re-order
+        their clauses against the CURRENT selectivity stats (ordering is a
+        perf detail — cached plans stay correct forever)."""
+        self._plans.clear()
+        self._plans_by_id.clear()
+        self._stats_cache = None
+
+    def _execute(self, plans: Sequence, view) -> tuple:
+        if hasattr(view, "parts"):              # StoredIndex
+            return engine_batch.execute_many_segments(
+                view.parts, plans, backend=self.backend)
+        return engine_batch.execute_many(
+            view.packed, plans, num_records=view.num_records,
+            backend=self.backend)
+
+    def _view(self):
+        """Immutable snapshot the lazy batch executes against — a query
+        sees the db as of query() time even if materialized after later
+        appends (packed buffers are functional jax arrays).  The packed
+        slice out of the indexer's capacity buffer is cached per
+        (buffer, record count): a steady-state serving loop re-queries
+        without re-copying the index."""
+        if self._si is None:
+            return self._index
+        buf, n = self._si._buf, self._si.num_records
+        c = self._view_cache
+        if c is not None and c[0] is buf and c[1] == n:
+            return c[2]
+        idx = self._si.index
+        self._view_cache = (buf, n, idx)
+        return idx
+
+    def query(self, q) -> Result:
+        """One expression / predicate / plan -> a lazy :class:`Result`."""
+        return self.query_many([q])[0]
+
+    def query_many(self, queries: Sequence) -> ResultBatch:
+        """A batch of expressions in ONE lazily executed bucketed dispatch
+        set; returns a :class:`ResultBatch` (sequence of lazy
+        :class:`Result` handles, in input order)."""
+        if not isinstance(queries, (list, tuple)):
+            queries = list(queries)
+        # inlined _plan_for fast path: submission of a steady-state
+        # serving batch costs one dict probe per query
+        byid = self._plans_by_id
+        plan_for = self._plan_for
+        plans = []
+        append = plans.append
+        for q in queries:
+            hit = byid.get(id(q))
+            append(hit[1] if hit is not None else plan_for(q))
+        view = self._view()
+        batch_run = LazyBatch(lambda: self._execute(plans, view))
+        return ResultBatch(batch_run, self.num_records, queries)
+
+    def serve_step(self):
+        """The bucketed batch executor as a serving-loop step function:
+        ``step(queries) -> (rows (Q, Nw) uint32, counts (Q,) int32)``,
+        eager, in request order (see
+        :func:`repro.serve.step.make_bitmap_query_step`)."""
+        def query_step(queries: Sequence):
+            return self.query_many(queries).materialize()
+        return query_step
+
+    def __repr__(self) -> str:
+        mode = ("live" if self._si is not None and self.store is None
+                else "durable" if self._si is not None else "read-only")
+        sch = self.schema or f"{self.num_keys} raw keys"
+        return (f"<BitmapDB {mode} {sch} records={self.num_records} "
+                f"backend={self.backend}>")
+
+
+def open_db(path: str, schema: Schema | None = None, *,
+            num_keys: int | None = None, backend: str = "auto",
+            spill_records: int | None = 4096,
+            capacity_words: int = 16) -> BitmapDB:
+    """Functional alias of :meth:`BitmapDB.open` — exported as
+    ``repro.db.open`` / ``repro.open`` (the documented entry point); named
+    ``open_db`` here so this module keeps the ``open`` builtin."""
+    return BitmapDB.open(path, schema, num_keys=num_keys, backend=backend,
+                         spill_records=spill_records,
+                         capacity_words=capacity_words)

@@ -41,9 +41,9 @@ _EXPORTS = {
     "QueryPlan": "planner", "CompositePlan": "planner",
     "FactoredPlan": "planner", "factor": "planner",
     "total_clauses": "planner", "execute": "planner",
-    "from_include_exclude": "planner",
+    "from_include_exclude": "planner", "KeyStats": "planner",
     # batch
-    "execute_many": "batch",
+    "execute_many": "batch", "execute_many_segments": "batch",
     # runtime
     "StreamingIndexer": "runtime", "MulticoreRuntime": "runtime",
     "multicore_create_index": "runtime", "append_packed": "runtime",

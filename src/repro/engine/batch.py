@@ -86,16 +86,14 @@ def canonical_shape(prog: PassProgram) -> tuple[int, int, int]:
     return g, p, l
 
 
-@functools.lru_cache(maxsize=64)
-def _executor(backend_name: str, g: int, p: int, l: int):
-    """One jitted batched executor per (backend, canonical shape): vmap over
-    queries of [OR over groups of [AND over passes of [fused kernel pass]]],
-    then one tail-mask + popcount per query."""
-    backend = backends.get_backend(backend_name)
+def _bucket_body(backend, p: int, g: int):
+    """The shared bucket-executor body: vmap over queries of [OR over
+    groups of [AND over passes of [fused kernel pass]]], then one
+    tail-mask + popcount per query.  ``aug`` is (M+1, Nw) with the all-ones
+    row at M; sels/invs (Q, g, p, l); post (Q, g, p) uint32 xor masks
+    (0 or 0xFFFFFFFF)."""
 
     def run(aug, num_records, sels, invs, post):
-        # aug (M+1, Nw) with the all-ones row at M; sels/invs (Q, g, p, l);
-        # post (Q, g, p) uint32 xor masks (0 or 0xFFFFFFFF).
         def one_pass(sel, inv, po):
             row, _ = backend.query(aug[sel], inv)   # count is dead code
             return row ^ po
@@ -112,7 +110,24 @@ def _executor(backend_name: str, g: int, p: int, l: int):
 
         return jax.vmap(one_query)(sels, invs, post)
 
-    return jax.jit(run)
+    return run
+
+
+@functools.lru_cache(maxsize=64)
+def _executor(backend_name: str, g: int, p: int, l: int):
+    """One jitted batched executor per (backend, canonical shape)."""
+    return jax.jit(_bucket_body(backends.get_backend(backend_name), p, g))
+
+
+@functools.lru_cache(maxsize=64)
+def _stacked_executor(backend_name: str, g: int, p: int, l: int):
+    """Segment-stacked twin of :func:`_executor`: the SAME bucket body
+    vmapped over a leading segment axis of ``aug`` (S, M+1, Nw) and
+    ``num_records`` (S,), with the selector arrays broadcast — every live
+    segment of a uniform-word-count chain serves the whole bucket in ONE
+    dispatch instead of one dispatch per segment."""
+    body = _bucket_body(backends.get_backend(backend_name), p, g)
+    return jax.jit(jax.vmap(body, in_axes=(0, 0, None, None, None)))
 
 
 def batched_executor_cache_info():
@@ -276,6 +291,56 @@ def execute_many(packed: jax.Array,
     return _serve(packed, num_records, plans, _partition(plans, m), name)
 
 
+def _serve_stacked(stack: jax.Array, nrecs: Sequence[int], plans: Sequence,
+                   part, name: str) -> tuple[jax.Array, jax.Array]:
+    """Run a pre-partitioned batch against a STACK of uniform-word-count
+    packed buffers (S, M, Nw) holding ``nrecs[s]`` records each — one
+    vmapped dispatch per bucket covers every segment.  Returns
+    (rows (S, Q, Nw), counts (S, Q)) in input query order."""
+    s, m, nw = stack.shape
+    buckets, zeros, composite = part
+    q = len(plans)
+    pieces_r: list[jax.Array] = []
+    pieces_c: list[jax.Array] = []
+    order: list[int] = []
+    if buckets:
+        aug = jnp.concatenate(
+            [stack, jnp.full((s, 1, nw), 0xFFFFFFFF, dtype=jnp.uint32)],
+            axis=1)
+        nrec = jnp.asarray(list(nrecs), jnp.int32)
+        for shape, idxs, sels, invs, post in buckets:
+            rws, cts = _stacked_executor(name, *shape)(aug, nrec, sels,
+                                                       invs, post)
+            pieces_r.append(rws)
+            pieces_c.append(cts)
+            order.extend(idxs)
+    if zeros:
+        pieces_r.append(jnp.zeros((s, len(zeros), nw), jnp.uint32))
+        pieces_c.append(jnp.zeros((s, len(zeros)), jnp.int32))
+        order.extend(zeros)
+    for qi in composite:                # size-guard fallback: out-of-band
+        rs, cs = [], []
+        for si in range(s):
+            r, c = planner.execute(stack[si], plans[qi],
+                                   num_records=int(nrecs[si]), backend=name)
+            rs.append(r)
+            cs.append(c)
+        pieces_r.append(jnp.stack(rs)[:, None])
+        pieces_c.append(jnp.stack(cs)[:, None])
+        order.append(qi)
+
+    rows_all = (pieces_r[0] if len(pieces_r) == 1
+                else jnp.concatenate(pieces_r, axis=1))
+    counts_all = (pieces_c[0] if len(pieces_c) == 1
+                  else jnp.concatenate(pieces_c, axis=1))
+    if order == list(range(q)):
+        return rows_all, counts_all
+    inv = np.empty(q, np.int32)
+    inv[np.asarray(order, np.int32)] = np.arange(q, dtype=np.int32)
+    inv = jnp.asarray(inv)
+    return rows_all[:, inv], counts_all[:, inv]
+
+
 _seg_splice = jax.jit(policy.splice_packed)
 
 
@@ -283,7 +348,7 @@ def execute_many_segments(parts: Sequence[tuple[jax.Array, int]],
                           predicates: Sequence, *, backend: str = "auto",
                           max_clauses: int | None =
                           planner.DEFAULT_MAX_CLAUSES,
-                          factor: bool = False
+                          factor: bool = False, stack_uniform: bool = True
                           ) -> tuple[jax.Array, jax.Array]:
     """Serve a query batch over an index stored as a chain of packed
     segments covering contiguous record ranges — the durable layout of
@@ -297,6 +362,13 @@ def execute_many_segments(parts: Sequence[tuple[jax.Array, int]],
     OR-spliced into the global (Q, ceil(N/32)) rows at the segment's bit
     offset.  Counts sum per segment.  Bit-identical to
     :func:`execute_many` over the spliced-together index.
+
+    ``stack_uniform`` (default on): when every live segment shares ONE
+    word count — the steady state of a tier-compacted store — the
+    segments stack into an (S, M, Nw) array and each bucket serves ALL
+    segments in a single vmapped dispatch (:func:`_stacked_executor`)
+    instead of one bucketed dispatch per segment; results stay
+    bit-identical to the per-segment path.
     """
     name = backends.resolve_backend(backend)
     parts = [(p, int(n)) for p, n in parts]
@@ -319,6 +391,16 @@ def execute_many_segments(parts: Sequence[tuple[jax.Array, int]],
     max_bw = max(p.shape[1] for p, _ in parts)
     rows = jnp.zeros((q, tw + max_bw + 1), jnp.uint32)
     counts = jnp.zeros((q,), jnp.int32)
+    uniform = len({p.shape[1] for p, _ in parts}) == 1
+    if stack_uniform and uniform and len(parts) > 1:
+        stack = jnp.stack([jnp.asarray(p) for p, _ in parts])
+        nrecs = [n for _, n in parts]
+        rows_s, counts_s = _serve_stacked(stack, nrecs, plans, part, name)
+        start = 0
+        for si, n in enumerate(nrecs):
+            rows = _seg_splice(rows, jnp.int32(start), rows_s[si])
+            start += n
+        return rows[:, :tw], counts_s.sum(axis=0).astype(jnp.int32)
     start = 0
     for packed, n in parts:
         r_i, c_i = _serve(jnp.asarray(packed), n, plans, part, name)

@@ -104,6 +104,40 @@ Literal = tuple[int, bool]           # (key index, inverted)
 Clause = frozenset  # of Literal
 
 
+@dataclasses.dataclass(frozen=True)
+class KeyStats:
+    """Per-key set-bit counts — the planner's cardinality estimates.
+
+    ``counts[i]`` is the number of records whose index bit for key row
+    ``i`` is set (exactly, or an upper-bound estimate); ``num_records`` is
+    the record population the counts were taken over.  When supplied to
+    :func:`plan`, DNF clauses execute cheapest-estimated-selectivity first
+    instead of fewest-literals first.  Ordering NEVER changes a result bit
+    (the clause rows OR together), only which fused pass a short-circuiting
+    executor would try first and how plans bucket by shape.
+    """
+    counts: tuple[int, ...]
+    num_records: int
+
+    @classmethod
+    def from_counts(cls, counts, num_records: int) -> "KeyStats":
+        return cls(tuple(int(c) for c in counts), int(num_records))
+
+    def literal_estimate(self, index: int, inverted: bool) -> int:
+        """Estimated matching records for one literal (unknown keys fall
+        back to the whole population — no information)."""
+        if not 0 <= index < len(self.counts):
+            return self.num_records
+        c = min(self.counts[index], self.num_records)
+        return self.num_records - c if inverted else c
+
+    def clause_estimate(self, clause: Iterable[Literal]) -> int:
+        """Upper bound on an AND clause's selectivity: its most selective
+        literal bounds the intersection."""
+        return min((self.literal_estimate(i, inv) for i, inv in clause),
+                   default=self.num_records)
+
+
 def _dnf(p: Pred, neg: bool) -> frozenset:
     """Disjunctive normal form as a set of conjunctive clauses."""
     if isinstance(p, Key):
@@ -124,18 +158,24 @@ def _dnf(p: Pred, neg: bool) -> frozenset:
     raise TypeError(f"not a predicate: {p!r}")
 
 
-def _simplify(clauses: Iterable[Clause]) -> list[tuple[Literal, ...]]:
+def _simplify(clauses: Iterable[Clause],
+              stats: KeyStats | None = None) -> list[tuple[Literal, ...]]:
     sat = [c for c in clauses
            if not any((i, not inv) in c for i, inv in c)]
     # absorption: a clause subsumed by a subset clause contributes nothing
     kept = [c for c in sat
             if not any(o < c for o in sat)]
-    # deterministic cheapest-first ordering (fewest literals first, then
-    # lexicographic): stable plan shapes / cache keys, and a short-circuit
-    # executor can try the cheapest pass first — the clause order never
-    # changes the OR-of-clauses result
-    return sorted((tuple(sorted(c)) for c in set(kept)),
-                  key=lambda c: (len(c), c))
+    # deterministic cheapest-first ordering: estimated selectivity when
+    # per-key stats are available, literal count as the uninformed
+    # fallback, lexicographic tiebreak — stable plan shapes / cache keys,
+    # and a short-circuit executor can try the cheapest pass first.  The
+    # clause order never changes the OR-of-clauses result.
+    if stats is None:
+        sort_key = lambda c: (len(c), c)                  # noqa: E731
+    else:
+        sort_key = lambda c: (stats.clause_estimate(c),   # noqa: E731
+                              len(c), c)
+    return sorted((tuple(sorted(c)) for c in set(kept)), key=sort_key)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,27 +246,32 @@ def _dnf_size(p: Pred, neg: bool, cap: int) -> int:
     return min(sum(sizes), cap + 1)
 
 
-def _plan_guarded(p: Pred, neg: bool, max_clauses: int) -> AnyPlan:
+def _plan_guarded(p: Pred, neg: bool, max_clauses: int,
+                  stats: KeyStats | None) -> AnyPlan:
     if _dnf_size(p, neg, max_clauses) <= max_clauses:
-        return QueryPlan(tuple(_simplify(_dnf(p, neg))))
+        return QueryPlan(tuple(_simplify(_dnf(p, neg), stats)))
     if isinstance(p, Not):
-        return _plan_guarded(p.child, not neg, max_clauses)
+        return _plan_guarded(p.child, not neg, max_clauses, stats)
     conjunctive = isinstance(p, And) != neg
-    parts = tuple(_plan_guarded(c, neg, max_clauses) for c in p.children)
+    parts = tuple(_plan_guarded(c, neg, max_clauses, stats)
+                  for c in p.children)
     return CompositePlan("and" if conjunctive else "or", parts)
 
 
-def plan(pred: Pred, *, max_clauses: int | None = DEFAULT_MAX_CLAUSES
-         ) -> AnyPlan:
+def plan(pred: Pred, *, max_clauses: int | None = DEFAULT_MAX_CLAUSES,
+         stats: KeyStats | None = None) -> AnyPlan:
     """Normalize + simplify a predicate tree into an executable plan.
 
     Returns a :class:`QueryPlan` whenever the simplified DNF fits in
     ``max_clauses`` clauses; otherwise a :class:`CompositePlan` that keeps
     the offending AND/OR nodes as separate sub-plans instead of distributing
-    them (``max_clauses=None`` disables the guard)."""
+    them (``max_clauses=None`` disables the guard).  ``stats`` (per-key
+    set-bit counts, see :class:`KeyStats`) orders the DNF clauses by
+    estimated selectivity instead of literal count — result bits are
+    identical either way."""
     if max_clauses is None:
-        return QueryPlan(tuple(_simplify(_dnf(pred, neg=False))))
-    return _plan_guarded(pred, False, max_clauses)
+        return QueryPlan(tuple(_simplify(_dnf(pred, neg=False), stats)))
+    return _plan_guarded(pred, False, max_clauses, stats)
 
 
 def total_clauses(pl: AnyPlan) -> int:

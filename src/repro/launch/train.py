@@ -46,6 +46,7 @@ def main() -> None:
     from jax.sharding import NamedSharding
     from repro.configs import get_config, get_smoke_config
     from repro.data.pipeline import BitmapIndexedDataset, DataConfig
+    from repro.engine.planner import key as _key
     from repro.launch.mesh import make_production_mesh, make_smoke_mesh
     from repro.models.model import abstract_params, init_params, param_logical
     from repro.optim.adamw import OptimConfig, init_opt_state
@@ -63,7 +64,7 @@ def main() -> None:
     ds = BitmapIndexedDataset(dcfg)
 
     def batches(start):
-        return ds.batches(args.global_batch, include=[3], seed=0,
+        return ds.batches(args.global_batch, where=_key(3), seed=0,
                           start_step=start)
 
     tcfg = TrainConfig(OptimConfig(warmup_steps=max(args.steps // 10, 1),

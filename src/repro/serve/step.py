@@ -4,12 +4,8 @@ structured retrieval over a bitmap index (the paper's query workload served
 through the engine's bucketed batch executor)."""
 from __future__ import annotations
 
-import functools
-
-import jax
 import jax.numpy as jnp
 
-from repro.engine import batch as _engine_batch
 from repro.models.config import ModelConfig
 from repro.models.model import model_forward
 
@@ -36,30 +32,23 @@ def make_decode_step(cfg: ModelConfig):
 
 def make_bitmap_query_step(index, *, backend: str = "auto"):
     """Batched structured-retrieval step over a bitmap index: the returned
-    ``query_step(predicates)`` serves many predicate trees per dispatch
-    (plan-shape bucketing in ``repro.engine.batch``) and yields
+    ``query_step(queries)`` serves many queries per dispatch (plan-shape
+    bucketing through the :mod:`repro.db` facade) and yields
     (rows (Q, Nw) uint32, counts (Q,) int32) in request order — the
     serving-path analogue of ``make_prefill_step`` for the paper's query
-    workload.
+    workload.  Queries are engine predicate trees, pre-built plans, or
+    (when the session carries a schema) ``repro.db`` expressions.
 
-    ``index`` is either an in-memory
-    :class:`repro.engine.policy.BitmapIndex` or a segment-backed
+    ``index`` is a :class:`repro.db.BitmapDB` session (served as-is — its
+    schema, stats and plan cache apply), an in-memory
+    :class:`repro.engine.policy.BitmapIndex`, or a segment-backed
     :class:`repro.store.StoredIndex` (a spilled/recovered index served
-    segment-parallel — no materialized full buffer)."""
-    if hasattr(index, "parts"):            # repro.store.StoredIndex
-        def query_step(predicates):
-            return _engine_batch.execute_many_segments(
-                index.parts, predicates, backend=backend)
-        return query_step
-
-    packed, num_records = index.packed, index.num_records
-
-    def query_step(predicates):
-        return _engine_batch.execute_many(packed, predicates,
-                                          num_records=num_records,
-                                          backend=backend)
-
-    return query_step
+    segment-parallel — stacked into one vmapped dispatch per bucket when
+    the segment word counts are uniform)."""
+    from repro import db as _db
+    if isinstance(index, _db.BitmapDB):
+        return index.serve_step()
+    return _db.BitmapDB.from_index(index, backend=backend).serve_step()
 
 
 def greedy_generate(params, cfg: ModelConfig, tokens, steps: int,

@@ -1,0 +1,124 @@
+"""Hypothesis property tests for the `repro.db` facade (skipped when
+hypothesis is not installed — the randomized seeded equivalents in
+tests/test_db.py always run).
+
+Properties:
+  * expr -> Pred -> plan -> packed execution == the NumPy reference
+    evaluator over encoded records, for arbitrary schemas/data/expressions;
+  * Schema JSON round-trips preserve the key-row mapping;
+  * binned key_of/keys_between agree pointwise.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.db import BitmapDB, Column, Schema, col  # noqa: E402
+from repro.db import expr as expr_mod  # noqa: E402
+from repro.engine import planner  # noqa: E402
+
+from test_db import _ref_eval  # noqa: E402
+
+
+@st.composite
+def schemas(draw):
+    cols = []
+    ncols = draw(st.integers(1, 3))
+    for i in range(ncols):
+        if draw(st.booleans()):
+            card = draw(st.integers(1, 5))
+            cols.append(Column.categorical(f"c{i}", list(range(card))))
+        else:
+            edges = sorted(draw(st.sets(
+                st.integers(-40, 40), min_size=2, max_size=6)))
+            cols.append(Column.binned(f"c{i}", [float(e) for e in edges]))
+    return Schema(cols)
+
+
+def _rows_for(draw, schema, n):
+    rows = {}
+    for c in schema.columns:
+        if c.kind == "categorical":
+            rows[c.name] = [c.values[draw(st.integers(0, len(c.values) - 1))]
+                            for _ in range(n)]
+        else:
+            lo, hi = c.edges[0], c.edges[-1]
+            rows[c.name] = [float(draw(st.floats(lo, hi, allow_nan=False)))
+                            for _ in range(n)]
+    return rows
+
+
+def _expr_for(draw, schema, depth):
+    if depth == 0 or draw(st.booleans()):
+        c = schema.columns[draw(st.integers(0, len(schema.columns) - 1))]
+        if c.kind == "categorical":
+            choice = draw(st.integers(0, 2))
+            if choice == 0:
+                v = c.values[draw(st.integers(0, len(c.values) - 1))]
+                return col(c.name) == v
+            if choice == 1:
+                picks = draw(st.sets(st.integers(0, len(c.values) - 1),
+                                     max_size=len(c.values)))
+                return col(c.name).isin([c.values[i] for i in sorted(picks)])
+            return planner.key(draw(st.integers(0, schema.num_keys - 1)))
+        lo, hi = c.edges[0] - 5, c.edges[-1] + 5
+        a = draw(st.floats(lo, hi, allow_nan=False))
+        b = draw(st.floats(lo, hi, allow_nan=False))
+        return col(c.name).between(min(a, b), max(a, b))
+    left = _expr_for(draw, schema, depth - 1)
+    right = _expr_for(draw, schema, depth - 1)
+    op = draw(st.integers(0, 2))
+    out = left & right if op == 0 else left | right if op == 1 else ~left
+    return out
+
+
+@st.composite
+def db_cases(draw):
+    schema = draw(schemas())
+    n = draw(st.integers(1, 60))
+    rows = _rows_for(draw, schema, n)
+    exprs = [_expr_for(draw, schema, draw(st.integers(0, 2)))
+             for _ in range(draw(st.integers(1, 5)))]
+    return schema, rows, exprs
+
+
+@settings(max_examples=40, deadline=None)
+@given(db_cases())
+def test_expr_plan_execute_round_trip(case):
+    schema, rows, exprs = case
+    n = len(next(iter(rows.values())))
+    db = BitmapDB(schema, backend="ref")
+    db.ingest(rows)
+    enc = schema.encode(rows)
+    for q, res in zip(exprs, db.query_many(exprs)):
+        want = np.flatnonzero(_ref_eval(q, enc, schema))
+        np.testing.assert_array_equal(res.ids, want)
+        assert res.count == len(want) <= n
+
+
+@settings(max_examples=60, deadline=None)
+@given(schemas())
+def test_schema_json_round_trip(schema):
+    s2 = Schema.from_json(schema.to_json())
+    assert s2 == schema
+    assert s2.num_keys == schema.num_keys
+    for c in schema.columns:
+        if c.kind == "categorical":
+            for v in c.values:
+                assert s2.key_of(c.name, v) == schema.key_of(c.name, v)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.data())
+def test_binned_key_of_consistent_with_keys_between(data):
+    edges = sorted(data.draw(st.sets(st.integers(-30, 30),
+                                     min_size=2, max_size=8)))
+    c = Schema([Column.binned("t", [float(e) for e in edges])])["t"]
+    v = data.draw(st.floats(float(edges[0]), float(edges[-1]),
+                            allow_nan=False))
+    k = c.key_of(v)
+    # the point interval [v, v] must select exactly bins that can hold v
+    ks = c.keys_between(v, v)
+    assert k in ks
+    assert len(ks) <= 2          # v on an interior edge touches two bins

@@ -430,6 +430,46 @@ def test_execute_many_segments_matches_whole_index():
                                       np.asarray(want_c))
 
 
+def test_execute_many_segments_stacks_uniform_word_counts():
+    """Satellite: segments sharing one word count serve each bucket in a
+    single vmapped dispatch (stacked over segments) — bit-identical to the
+    per-segment dispatch path and to the unsplit index."""
+    n, m = 191, 16
+    records = jnp.asarray(RNG.integers(0, 48, (n, 8), dtype=np.int32))
+    keys = jnp.asarray(RNG.integers(0, 48, (m,), dtype=np.int32))
+    full = backends.get_backend("ref").create_index(records, keys)
+    rng = np.random.default_rng(21)
+    preds = [_random_pred(rng, m) for _ in range(25)]
+    preds.append(key(0) & ~key(0))            # contradiction (zeros path)
+    # an adversarial deep tree exercising the composite fallback per segment
+    deep = key(0) | key(1)
+    for i in range(2, 18):
+        deep = (key(i % m) | key((i + 1) % m)) & deep
+    preds.append(deep)
+    want_r, want_c = batch.execute_many(full, preds, num_records=n,
+                                        backend="ref")
+    # 64/63/64: all three segments pack into 2 words (uniform) with a
+    # non-32-aligned interior offset (the third starts at record 127)
+    parts, at = [], 0
+    for c in (64, 63, 64):
+        parts.append((backends.get_backend("ref").create_index(
+            records[at:at + c], keys), c))
+        at += c
+    assert len({p.shape[1] for p, _ in parts}) == 1
+    stacked = batch.execute_many_segments(parts, preds, backend="ref",
+                                          stack_uniform=True)
+    per_seg = batch.execute_many_segments(parts, preds, backend="ref",
+                                          stack_uniform=False)
+    np.testing.assert_array_equal(np.asarray(stacked[0]),
+                                  np.asarray(per_seg[0]))
+    np.testing.assert_array_equal(np.asarray(stacked[1]),
+                                  np.asarray(per_seg[1]))
+    np.testing.assert_array_equal(np.asarray(stacked[0]),
+                                  np.asarray(want_r))
+    np.testing.assert_array_equal(np.asarray(stacked[1]),
+                                  np.asarray(want_c))
+
+
 def test_stored_index_query_many_matches_in_memory(tmp_path):
     """Acceptance: segment-parallel query_many over a spilled index ==
     in-memory results for the same predicate trees."""

@@ -9,9 +9,10 @@ import json
 import sys
 
 REQUIRED = ("engine_planner_query_batched", "engine_streaming_append",
-            "store_spill_recover", "db_facade_overhead")
+            "store_spill_recover", "db_facade_overhead",
+            "serve_microbatch")
 EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact_recover", "bitexact",
-                   "allclose", "facade_overhead_ok")
+                   "allclose", "facade_overhead_ok", "microbatch_ok")
 
 
 def main(path: str = "BENCH_engine.json") -> int:

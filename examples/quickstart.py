@@ -11,6 +11,7 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 import os
 import sys
 import tempfile
+import time
 
 sys.path.insert(0, "src")
 
@@ -104,6 +105,26 @@ def main():
         rows_out, counts = step(batch)
         print(f"served a {len(batch)}-query batch in bucketed dispatches: "
               f"counts={[int(c) for c in counts]}")
+
+        # ---- the service port: micro-batching + standby duty cycle ----
+        # submit() from any number of threads returns a future; the
+        # scheduler coalesces everything inside the delay window into ONE
+        # bucketed dispatch, then duty-cycles into standby when idle —
+        # the paper's operating model as an API.
+        with recovered.serve(max_delay_ms=2.0, idle_after_ms=10.0) as svc:
+            futs = [svc.submit(qq) for qq in batch * 8]   # 32 requests
+            svc.drain()
+            assert [int(f.count) for f in futs[:4]] == \
+                [int(c) for c in counts]
+            deadline = time.time() + 5        # idle past the threshold
+            while svc.state != "standby" and time.time() < deadline:
+                time.sleep(0.01)
+            m = svc.metrics()
+            print(f"service: {m.served} queries in {m.batches} coalesced "
+                  f"batch(es), p50={m.latency_p50_ms:.2f}ms, "
+                  f"state={m.state}, active={m.active_joules:.2e}J "
+                  f"standby={m.standby_joules:.2e}J")
+            assert m.state == "standby", "idle service must clock-gate"
 
     print("quickstart OK")
 

@@ -29,10 +29,13 @@ import importlib
 #: facade symbols re-exported at top level -> their home in repro.db
 _DB_EXPORTS = ("BitmapDB", "Schema", "Column", "col", "Result", "open")
 
+#: serving-port symbols -> their home in repro.serve.service
+_SERVE_EXPORTS = ("BitmapService", "ServiceConfig")
+
 _SUBMODULES = ("db", "engine", "store", "core", "data", "serve", "kernels",
                "checkpoint", "compat")
 
-__all__ = sorted(_DB_EXPORTS) + sorted(_SUBMODULES)
+__all__ = sorted(_DB_EXPORTS + _SERVE_EXPORTS) + sorted(_SUBMODULES)
 
 
 def __getattr__(name):
@@ -40,6 +43,9 @@ def __getattr__(name):
         return importlib.import_module(f"{__name__}.{name}")
     if name in _DB_EXPORTS:
         return getattr(importlib.import_module(f"{__name__}.db"), name)
+    if name in _SERVE_EXPORTS:
+        return getattr(
+            importlib.import_module(f"{__name__}.serve.service"), name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 

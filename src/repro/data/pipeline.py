@@ -114,6 +114,7 @@ class BitmapIndexedDataset:
         self.schema = attribute_schema(cfg)
         self.store_dir = store_dir
         self._shards: dict[int, tuple[np.ndarray, "object"]] = {}
+        self._services: dict[int, "object"] = {}
 
     def _shard_path(self, shard_id: int) -> str:
         return os.path.join(self.store_dir, f"shard-{shard_id:04d}")
@@ -200,20 +201,79 @@ class BitmapIndexedDataset:
         db = self.db(shard_id)
         return db.query_many(list(wheres)).all_ids()
 
+    # -------------------------------------------------------- async prefetch
+    def service(self, shard_id: int, **config):
+        """The shard's :class:`repro.serve.service.BitmapService` (opened
+        lazily; ``config`` keywords apply on first open).  Selections
+        submitted through it execute on the service's scheduler thread,
+        coalesced with any other caller's — the prefetch path.  Shard
+        stores spill synchronously at ingest (``snapshot()``), so
+        background maintenance stays off by default here."""
+        if shard_id not in self._services:
+            config.setdefault("max_delay_ms", 1.0)
+            config.setdefault("maintenance", False)
+            self._services[shard_id] = self.db(shard_id).serve(**config)
+        return self._services[shard_id]
+
+    def select_many_async(self, shard_id: int, wheres: Sequence[Query]
+                          ) -> list:
+        """Non-blocking :meth:`select_many`: submit the burst to the
+        shard's service and return its
+        :class:`repro.serve.service.QueryFuture` list immediately —
+        ``.ids`` on each future blocks only for ITS micro-batch, so
+        submission overlaps with consumption (and with ingest of the
+        next shard in :meth:`batches`).  Ids are bit-identical to the
+        synchronous path."""
+        return self.service(shard_id).submit_many(list(wheres))
+
+    def close(self) -> None:
+        """Close every shard service (drains in-flight selections)."""
+        for svc in self._services.values():
+            svc.close()
+        self._services.clear()
+
     def batches(self, batch_size: int, include: Sequence[int] = (),
                 exclude: Sequence[int] = (), *, where: Query | None = None,
-                seed: int = 0, start_step: int = 0) -> Iterator[dict]:
+                seed: int = 0, start_step: int = 0,
+                prefetch: bool = False) -> Iterator[dict]:
         """Infinite deterministic batch stream over the selected subset.
 
         ``start_step`` resumes mid-stream after a restart (the training
-        loop checkpoints its step counter — see train/loop.py)."""
+        loop checkpoints its step counter — see train/loop.py).
+
+        ``prefetch=True`` pipelines shard selection: each shard's query
+        is submitted to its service the moment the shard is ingested and
+        executes on the scheduler thread while the NEXT shard ingests;
+        futures are consumed afterwards.  Ids — and therefore the batch
+        stream — are bit-identical to the synchronous path.  Opt-in: it
+        opens one service (scheduler thread) per shard, which lives
+        until :meth:`close`."""
+        from repro import db as _db
+        if where is None:
+            query: Query = _db.include_exclude_pred(include, exclude)
+        elif include or exclude:
+            raise ValueError("pass either include/exclude or where=, "
+                             "not both")
+        else:
+            query = where
         rng = np.random.default_rng(seed)
         pools = []
-        for s in range(self.cfg.num_shards):
-            ids = self.select(s, include, exclude, where=where)
-            tokens, _ = self._ensure_db(s)
-            if len(ids):
-                pools.append(tokens[ids])
+        if prefetch:
+            futs = []
+            for s in range(self.cfg.num_shards):
+                self._ensure_db(s)
+                futs.append(self.select_many_async(s, [query])[0])
+            for s, fut in enumerate(futs):
+                ids = fut.ids
+                tokens, _ = self._shards[s]
+                if len(ids):
+                    pools.append(tokens[ids])
+        else:
+            for s in range(self.cfg.num_shards):
+                ids = self.select(s, where=query)
+                tokens, _ = self._ensure_db(s)
+                if len(ids):
+                    pools.append(tokens[ids])
         if not pools:
             raise ValueError("query selected zero documents")
         pool = np.concatenate(pools, axis=0)

@@ -18,6 +18,19 @@ from typing import Callable
 import numpy as np
 
 
+def unpack_ids(row_bits: np.ndarray, num_records: int) -> np.ndarray:
+    """Matching record ordinals (sorted) of ONE packed result row —
+    the single bitmap->ordinals extraction every result surface
+    (:class:`Result`, :class:`ResultBatch`,
+    :class:`repro.serve.service.QueryFuture`) shares."""
+    if row_bits.size == 0:
+        return np.empty((0,), np.int64)
+    ids = np.flatnonzero(
+        np.unpackbits(row_bits.view(np.uint8), bitorder="little"))
+    # tail bits are masked zero by the engine, but guard anyway
+    return ids[ids < num_records]
+
+
 class LazyBatch:
     """One deferred batched execution shared by a set of results."""
 
@@ -72,13 +85,7 @@ class Result:
 
     @property
     def ids(self) -> np.ndarray:
-        bits = np.asarray(self.rows)
-        if bits.size == 0:
-            return np.empty((0,), np.int64)
-        ids = np.flatnonzero(
-            np.unpackbits(bits.view(np.uint8), bitorder="little"))
-        # tail bits are masked zero by the engine, but guard anyway
-        return ids[ids < self._num_records]
+        return unpack_ids(np.asarray(self.rows), self._num_records)
 
     def __len__(self) -> int:
         return self.count
@@ -133,12 +140,10 @@ class ResultBatch(Sequence):
         n = self._num_records
         if bits.size == 0:
             return [np.empty((0,), np.int64) for _ in self._queries]
-        out = []
-        for qi in range(bits.shape[0]):
-            ids = np.flatnonzero(
-                np.unpackbits(bits[qi].view(np.uint8), bitorder="little"))
-            out.append(ids[ids < n])
-        return out
+        # iterate the queries, not the rows — a pad_output batch carries
+        # extra unspecified rows past the real query count
+        return [unpack_ids(bits[qi], n)
+                for qi in range(len(self._queries))]
 
     def __repr__(self) -> str:
         state = "executed" if self._batch.executed else "pending"

@@ -96,6 +96,8 @@ class BitmapDB:
         self._counts = np.zeros((m,), np.int64)
         self._plans: dict = {}
         self._plans_by_id: dict = {}       # id(expr) fast path (see _plan_for)
+        self._cache_counters = {"id_hits": 0, "value_hits": 0, "misses": 0,
+                                "id_evictions": 0, "value_evictions": 0}
         self._stats_cache: tuple[int, planner.KeyStats] | None = None
         self._view_cache = None            # (buf, n, BitmapIndex) snapshot
         if path is None:
@@ -194,6 +196,13 @@ class BitmapDB:
         return self._si.store if self._si is not None else None
 
     @property
+    def indexer(self):
+        """The live :class:`repro.engine.runtime.StreamingIndexer` (None
+        for read-only ``from_index`` sessions) — the hook point service
+        maintenance uses to move spills off the append path."""
+        return self._si
+
+    @property
     def stats(self) -> planner.KeyStats:
         """Live per-key set-bit counts (exact) as planner cardinality
         estimates."""
@@ -269,24 +278,29 @@ class BitmapDB:
             fmt.write_bytes_atomic(sf, self.schema.to_json().encode())
 
     # ---------------------------------------------------------------- query
-    #: id-cache entries above this are dropped wholesale — bounds memory
-    #: for workloads that build every expression object fresh (the
-    #: value-keyed plan cache still dedups those).
+    #: cache entries above this are dropped wholesale — bounds memory for
+    #: workloads that build every expression object fresh (id cache) or
+    #: never repeat a value (value cache); both limits are deliberately
+    #: the same so neither cache can outgrow the other.
     _ID_CACHE_LIMIT = 65536
+    _VALUE_CACHE_LIMIT = 65536
 
     def _plan_for(self, q):
         # serving loops re-submit the same expression OBJECTS: an identity
         # hit skips even the value-hash of a nested tree.  Entries keep a
         # strong reference to the query, so a cached id can never be a
         # recycled object's — a hit IS the same object.
+        c = self._cache_counters
         hit = self._plans_by_id.get(id(q))
         if hit is not None:
+            c["id_hits"] += 1
             return hit[1]
         if isinstance(q, (planner.QueryPlan, planner.FactoredPlan,
                           planner.CompositePlan)):
             return q
         pl = self._plans.get(q)
         if pl is None:
+            c["misses"] += 1
             pred = expr_mod.lower(q, self.schema)
             planner.check_key_range(planner.key_indices(pred),
                                     self.num_keys)
@@ -295,11 +309,26 @@ class BitmapDB:
             # popcount if the caller already asked for .stats
             stats = self.stats if self._counts is not None else None
             pl = planner.plan(pred, stats=stats)
+            if len(self._plans) >= self._VALUE_CACHE_LIMIT:
+                c["value_evictions"] += len(self._plans)
+                self._plans.clear()
             self._plans[q] = pl
+        else:
+            c["value_hits"] += 1
         if len(self._plans_by_id) >= self._ID_CACHE_LIMIT:
+            c["id_evictions"] += len(self._plans_by_id)
             self._plans_by_id.clear()
         self._plans_by_id[id(q)] = (q, pl)
         return pl
+
+    def cache_stats(self) -> dict:
+        """Plan-cache health for service metrics: hit/miss/eviction
+        counters plus the live sizes of the identity-keyed and
+        value-keyed caches (both bounded at 64k entries, dropped
+        wholesale at the limit)."""
+        return dict(self._cache_counters,
+                    id_size=len(self._plans_by_id),
+                    value_size=len(self._plans))
 
     def replan(self) -> None:
         """Drop the per-expression plan cache so future queries re-order
@@ -309,13 +338,14 @@ class BitmapDB:
         self._plans_by_id.clear()
         self._stats_cache = None
 
-    def _execute(self, plans: Sequence, view) -> tuple:
+    def _execute(self, plans: Sequence, view,
+                 pad_output: bool = False) -> tuple:
         if hasattr(view, "parts"):              # StoredIndex
             return engine_batch.execute_many_segments(
                 view.parts, plans, backend=self.backend)
         return engine_batch.execute_many(
             view.packed, plans, num_records=view.num_records,
-            backend=self.backend)
+            backend=self.backend, pad_output=pad_output)
 
     def _view(self):
         """Immutable snapshot the lazy batch executes against — a query
@@ -326,11 +356,11 @@ class BitmapDB:
         without re-copying the index."""
         if self._si is None:
             return self._index
-        buf, n = self._si._buf, self._si.num_records
+        buf, n = self._si.view()           # consistent under appends
         c = self._view_cache
         if c is not None and c[0] is buf and c[1] == n:
             return c[2]
-        idx = self._si.index
+        idx = policy.BitmapIndex(buf[:, :policy.num_words(n)], n)
         self._view_cache = (buf, n, idx)
         return idx
 
@@ -338,10 +368,15 @@ class BitmapDB:
         """One expression / predicate / plan -> a lazy :class:`Result`."""
         return self.query_many([q])[0]
 
-    def query_many(self, queries: Sequence) -> ResultBatch:
+    def query_many(self, queries: Sequence, *,
+                   pad_output: bool = False) -> ResultBatch:
         """A batch of expressions in ONE lazily executed bucketed dispatch
         set; returns a :class:`ResultBatch` (sequence of lazy
-        :class:`Result` handles, in input order)."""
+        :class:`Result` handles, in input order).  ``pad_output=True``
+        pads the materialized arrays' query axis to a power of two
+        (handles still cover exactly the submitted queries) — the
+        serving scheduler uses this so varying coalesced batch sizes
+        reuse compiled shapes instead of retracing."""
         if not isinstance(queries, (list, tuple)):
             queries = list(queries)
         # inlined _plan_for fast path: submission of a steady-state
@@ -350,11 +385,19 @@ class BitmapDB:
         plan_for = self._plan_for
         plans = []
         append = plans.append
+        fast_hits = 0
         for q in queries:
             hit = byid.get(id(q))
-            append(hit[1] if hit is not None else plan_for(q))
+            if hit is not None:
+                fast_hits += 1
+                append(hit[1])
+            else:
+                append(plan_for(q))
+        if fast_hits:
+            self._cache_counters["id_hits"] += fast_hits
         view = self._view()
-        batch_run = LazyBatch(lambda: self._execute(plans, view))
+        batch_run = LazyBatch(
+            lambda: self._execute(plans, view, pad_output))
         return ResultBatch(batch_run, self.num_records, queries)
 
     def serve_step(self):
@@ -365,6 +408,18 @@ class BitmapDB:
         def query_step(queries: Sequence):
             return self.query_many(queries).materialize()
         return query_step
+
+    def serve(self, **config):
+        """Open a :class:`repro.serve.service.BitmapService` over this
+        session: an async ``submit()/drain()/close()`` port whose
+        micro-batch scheduler coalesces concurrently submitted queries
+        into the bucketed executors, runs store maintenance (spill /
+        compaction / gc) on a background thread, and duty-cycles into a
+        standby state when idle — the paper's operating model as a
+        serving API.  Keyword arguments go to
+        :class:`repro.serve.service.ServiceConfig`."""
+        from repro.serve.service import BitmapService
+        return BitmapService.open(self, **config)
 
     def __repr__(self) -> str:
         mode = ("live" if self._si is not None and self.store is None

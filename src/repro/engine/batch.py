@@ -23,7 +23,10 @@ batches of passes).  This module restructures the serving path:
   4. **Execute each bucket as ONE vmapped, jit-cached call** over
      ``(Q, G, P, L)`` literal-selector arrays.  Executors cache on
      ``(backend, G, P, L)`` only — key ids, inversion flags, and the record
-     count all enter traced.
+     count all enter traced — and the query axis Q itself pads up to a
+     power of two with provable all-zero pad queries (sliced off), so the
+     varying coalesced batch sizes a micro-batching scheduler emits reuse
+     one compiled trace instead of retracing per batch size.
 
 Composite plans (the DNF size-guard fallback) and contradictions are served
 out-of-band — composites through ``planner.execute``, contradictions as
@@ -152,12 +155,21 @@ def _bucket_arrays(progs: Sequence[PassProgram], shape: tuple[int, int, int],
     """Pack a bucket's programs into dense (Q, G, P, L) selector arrays.
 
     Defaults are the identities: literal slots select the virtual all-ones
-    row non-inverted; pad groups xor-mask pass 0 to all-zeros."""
+    row non-inverted; pad groups xor-mask pass 0 to all-zeros.
+
+    The query axis also rounds up to a power of two (pad queries are
+    all-pad-groups — provable all-zero rows, sliced off by the caller):
+    executors jit-cache on the full selector shape, so without Q-padding
+    every distinct coalesced batch size a serving scheduler produces
+    would compile a fresh trace — the micro-batching win would drown in
+    retraces."""
     g, p, l = shape
     q = len(progs)
-    sels = np.full((q, g, p, l), ones_idx, np.int32)
-    invs = np.zeros((q, g, p, l), np.int32)
-    post = np.zeros((q, g, p), np.uint32)
+    qp = _pow2_ceil(max(q, 1))
+    sels = np.full((qp, g, p, l), ones_idx, np.int32)
+    invs = np.zeros((qp, g, p, l), np.int32)
+    post = np.zeros((qp, g, p), np.uint32)
+    post[q:, :, 0] = 0xFFFFFFFF           # pad queries -> all-zero rows
     for qi, prog in enumerate(progs):
         for gi in range(g):
             if gi >= len(prog):
@@ -224,45 +236,65 @@ def _partition(plans: Sequence, m: int):
 
 
 def _serve(packed: jax.Array, num_records: int, plans: Sequence,
-           part, name: str) -> tuple[jax.Array, jax.Array]:
+           part, name: str, pad_output: bool = False
+           ) -> tuple[jax.Array, jax.Array]:
     """Run a pre-partitioned batch against ONE packed buffer; results come
-    back in input order."""
+    back in input order.
+
+    ``pad_output=True`` keeps every piece at its padded power-of-two size
+    and pads the OUTPUT query axis to ``pow2_ceil(Q)`` too (rows past the
+    real Q are unspecified padding): every array shape in the path is
+    then drawn from a small closed set, so a micro-batching scheduler's
+    varying batch compositions never pay a first-sight jit compile on
+    the re-assembly ops — callers index the real prefix."""
     m, nw = packed.shape
     buckets, zeros, composite = part
     q = len(plans)
+    q_out = _pow2_ceil(max(q, 1)) if pad_output else q
     # One result piece per bucket (plus zeros / composite fallbacks), then a
     # single permutation gather back into input order — no per-bucket
     # scatter over the (Q, Nw) output.
     pieces_r: list[jax.Array] = []
     pieces_c: list[jax.Array] = []
-    order: list[int] = []
+    order: list[int] = []       # original query index per real row
+    pos: list[int] = []         # its row in the concatenated pieces
+    off = 0
     if buckets:
         aug = jnp.concatenate(
             [packed, jnp.full((1, nw), 0xFFFFFFFF, dtype=jnp.uint32)], axis=0)
         nrec = jnp.int32(num_records)
         for shape, idxs, sels, invs, post in buckets:
             rws, cts = _executor(name, *shape)(aug, nrec, sels, invs, post)
+            if not pad_output and rws.shape[0] != len(idxs):
+                rws, cts = rws[:len(idxs)], cts[:len(idxs)]  # drop Q-pads
             pieces_r.append(rws)
             pieces_c.append(cts)
             order.extend(idxs)
+            pos.extend(range(off, off + len(idxs)))
+            off += rws.shape[0]
     if zeros:
-        pieces_r.append(jnp.zeros((len(zeros), nw), jnp.uint32))
-        pieces_c.append(jnp.zeros((len(zeros),), jnp.int32))
+        zn = _pow2_ceil(len(zeros)) if pad_output else len(zeros)
+        pieces_r.append(jnp.zeros((zn, nw), jnp.uint32))
+        pieces_c.append(jnp.zeros((zn,), jnp.int32))
         order.extend(zeros)
+        pos.extend(range(off, off + len(zeros)))
+        off += zn
     for qi in composite:                # size-guard fallback: out-of-band
         r, c = planner.execute(packed, plans[qi], num_records=num_records,
                                backend=name)
         pieces_r.append(r[None])
         pieces_c.append(c[None])
         order.append(qi)
+        pos.append(off)
+        off += 1
 
     rows_all = pieces_r[0] if len(pieces_r) == 1 else jnp.concatenate(pieces_r)
     counts_all = (pieces_c[0] if len(pieces_c) == 1
                   else jnp.concatenate(pieces_c))
-    if order == list(range(q)):         # single bucket in input order
-        return rows_all, counts_all
-    inv = np.empty(q, np.int32)
-    inv[np.asarray(order, np.int32)] = np.arange(q, dtype=np.int32)
+    if order == list(range(q)) and rows_all.shape[0] == q_out:
+        return rows_all, counts_all     # single in-order exact bucket
+    inv = np.zeros(q_out, np.int32)     # pad slots gather row 0 (ignored)
+    inv[np.asarray(order, np.int32)] = np.asarray(pos, np.int32)
     inv = jnp.asarray(inv)
     return rows_all[inv], counts_all[inv]
 
@@ -273,7 +305,7 @@ def execute_many(packed: jax.Array,
                                             planner.CompositePlan]], *,
                  num_records: int, backend: str = "auto",
                  max_clauses: int | None = planner.DEFAULT_MAX_CLAUSES,
-                 factor: bool = False
+                 factor: bool = False, pad_output: bool = False
                  ) -> tuple[jax.Array, jax.Array]:
     """Serve a batch of predicate trees (or pre-built plans) over one packed
     (M, Nw) index in a handful of vmapped dispatches.
@@ -282,13 +314,17 @@ def execute_many(packed: jax.Array,
     row tail-masked past ``num_records`` — bit-identical to a sequential
     loop of :func:`planner.execute`.  ``factor=True`` additionally runs
     common-clause factoring on each DNF plan before lowering.
+    ``pad_output=True`` pads the query axis of BOTH outputs to
+    ``pow2_ceil(Q)`` (rows past Q are unspecified) so varying serving
+    batch sizes reuse compiled re-assembly shapes — see :func:`_serve`.
     """
     name = backends.resolve_backend(backend)
     m, nw = packed.shape
     plans = _to_plans(predicates, m, max_clauses, factor)
     if not plans:
         return (jnp.zeros((0, nw), jnp.uint32), jnp.zeros((0,), jnp.int32))
-    return _serve(packed, num_records, plans, _partition(plans, m), name)
+    return _serve(packed, num_records, plans, _partition(plans, m), name,
+                  pad_output)
 
 
 def _serve_stacked(stack: jax.Array, nrecs: Sequence[int], plans: Sequence,
@@ -311,6 +347,8 @@ def _serve_stacked(stack: jax.Array, nrecs: Sequence[int], plans: Sequence,
         for shape, idxs, sels, invs, post in buckets:
             rws, cts = _stacked_executor(name, *shape)(aug, nrec, sels,
                                                        invs, post)
+            if rws.shape[1] != len(idxs):         # drop Q-pad rows
+                rws, cts = rws[:, :len(idxs)], cts[:, :len(idxs)]
             pieces_r.append(rws)
             pieces_c.append(cts)
             order.extend(idxs)

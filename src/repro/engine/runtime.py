@@ -46,8 +46,9 @@ from __future__ import annotations
 import dataclasses
 import functools
 import os
+import threading
 import time
-from typing import Iterable, Sequence
+from typing import Callable, Iterable, Sequence
 
 from repro import compat  # noqa: F401  (jax.shard_map / mesh shims on 0.4.x)
 
@@ -173,6 +174,16 @@ class StreamingIndexer:
         self._flush_records: int | None = None
         self._last_tick = -1
         self._last_tick_blocks = 0
+        # guards the (WAL log, buf, num_records, tick) commit point of an
+        # append against concurrent snapshot readers (background spill /
+        # serving view).  Held only for the splice DISPATCH and field
+        # assignments — never for device work, segment writes, or merges,
+        # so appends don't wait on maintenance and vice versa.
+        self._mu = threading.RLock()
+        # background-maintenance tap: when set, a reached flush threshold
+        # calls the hook (enqueue work) instead of spilling synchronously
+        # on the append path
+        self._spill_hook: Callable[[], None] | None = None
 
     @property
     def num_records(self) -> int:
@@ -240,26 +251,92 @@ class StreamingIndexer:
             # flush them now so recovery has no gap below the WAL floor
             self.spill()
 
+    def _flush_snapshot(self):
+        """Consistent (tail, count, start, tick watermark) snapshot of the
+        flushable suffix — the indexer mutex pins (buf, count, watermark)
+        together so a snapshot taken mid-append can never pair a new
+        buffer with an old count (or a watermark that over/under-claims
+        the flushed blocks)."""
+        with self._mu:
+            start = self._store.durable_records
+            count = self._num_records - start
+            if count <= 0:
+                return None
+            buf = self._buf
+            wm = (self._last_tick, self._last_tick_blocks)
+        # extraction runs OUTSIDE the mutex: the captured buffer is a
+        # functional jax array, and extract_packed can pay a first-sight
+        # jit compile — holding the lock here would stall every
+        # concurrent append behind the background spill
+        return policy.extract_packed(buf, start, count), count, start, wm
+
     def spill(self) -> None:
         """Flush the in-memory tail past the store's durable prefix as one
         immutable segment (atomic manifest commit + WAL rotation).  A
         no-op when nothing new has arrived since the last spill."""
         if self._store is None:
             raise RuntimeError("no store attached (see attach_store)")
-        start = self._store.durable_records
-        count = self._num_records - start
-        if count <= 0:
+        snap = self._flush_snapshot()
+        if snap is None:
             return
-        tail = policy.extract_packed(self._buf, start, count)
+        tail, count, start, wm = snap
         self._store.write_segment(
             np.asarray(jax.device_get(tail)), count, start,
-            tick_watermark=(self._last_tick, self._last_tick_blocks))
+            tick_watermark=wm)
+
+    # ------------------------------------------------- background spill
+    def set_spill_hook(self, hook: Callable[[], None] | None) -> None:
+        """Route threshold-triggered flushes through ``hook()`` (e.g. a
+        maintenance executor's enqueue) instead of spilling synchronously
+        on the append path; ``None`` restores synchronous spills.  The
+        hook runs on the appending thread and must only enqueue."""
+        self._spill_hook = hook
+
+    def pending_flush_records(self) -> int:
+        """Records in memory past the store's durable prefix (0 when no
+        store is attached) — what a background flush would spill."""
+        with self._mu:
+            if self._store is None:
+                return 0
+            return self._num_records - self._store.durable_records
+
+    def prepare_spill(self):
+        """Background-flush phase one: snapshot the flushable tail and
+        write its segment FILE (the slow part — runs on a maintenance
+        thread; concurrent appends keep streaming into the WAL).  Returns
+        an opaque token for :meth:`commit_spill`, or None when nothing
+        needs flushing.  Crash before the commit: the file is an orphan,
+        the WAL still holds every block — recovery is unaffected."""
+        if self._store is None:
+            raise RuntimeError("no store attached (see attach_store)")
+        snap = self._flush_snapshot()
+        if snap is None:
+            return None
+        tail, count, start, wm = snap
+        meta = self._store.prepare_segment(
+            np.asarray(jax.device_get(tail)), count, start)
+        return meta, wm
+
+    def commit_spill(self, token) -> None:
+        """Background-flush phase two: atomic manifest swap making the
+        prepared segment live.  Blocks appended during phase one are
+        carried into the fresh WAL generation by the store before the
+        swap (see ``SegmentStore._commit``)."""
+        meta, wm = token
+        self._store.commit_segment(meta, tick_watermark=wm)
+
+    def abort_spill(self, token) -> None:
+        """Abandon a prepared spill (its orphan file becomes gc fodder)."""
+        self._store.abort_segment(token[0])
 
     def _maybe_spill(self) -> None:
         if (self._store is not None and self._flush_records is not None
                 and (self._num_records - self._store.durable_records
                      >= self._flush_records)):
-            self.spill()
+            if self._spill_hook is not None:
+                self._spill_hook()
+            else:
+                self.spill()
 
     def _log_block(self, records: jax.Array, start: int,
                    tick: int | None = None) -> None:
@@ -323,11 +400,14 @@ class StreamingIndexer:
         n_new = int(records.shape[0])
         if n_new == 0:
             return self.index
-        self._log_block(records, self._num_records, tick)
-        self._grow(self._num_records // policy.PACK + block.shape[1] + 1)
-        self._buf = _splice(self._buf, jnp.int32(self._num_records), block)
-        self._num_records += n_new
-        self._stamp_tick(tick)
+        with self._mu:     # log + splice + count + tick commit atomically
+            self._log_block(records, self._num_records, tick)
+            self._grow(self._num_records // policy.PACK
+                       + block.shape[1] + 1)
+            self._buf = _splice(self._buf, jnp.int32(self._num_records),
+                                block)
+            self._num_records += n_new
+            self._stamp_tick(tick)
         self._maybe_spill()
         return self.index
 
@@ -339,28 +419,41 @@ class StreamingIndexer:
         b, n_blk = int(records.shape[0]), int(records.shape[1])
         if b == 0 or n_blk == 0:
             return self.index
-        if self._store is not None:
-            host = np.asarray(jax.device_get(records))
-            for i in range(b):
-                self._store.log_block(host[i],
-                                      self._num_records + i * n_blk)
         if mesh is not None:
             blocks = multicore_create_index(records, self.keys, mesh, axis,
                                             backend=self.backend)
         else:
             blocks = _vmapped_create(self.backend)(records, self.keys)
-        total = self._num_records + b * n_blk
-        self._grow(total // policy.PACK + blocks.shape[2] + 1)
-        self._buf, _ = _fold_scan(self._buf, jnp.int32(self._num_records),
-                                  blocks, n_blk)
-        self._num_records = total
+        # the device readback depends on nothing the mutex guards — keep
+        # snapshot readers (serving views) unblocked during the transfer
+        host = (np.asarray(jax.device_get(records))
+                if self._store is not None else None)
+        with self._mu:     # log + fold + count commit atomically
+            if host is not None:
+                for i in range(b):
+                    self._store.log_block(host[i],
+                                          self._num_records + i * n_blk)
+            total = self._num_records + b * n_blk
+            self._grow(total // policy.PACK + blocks.shape[2] + 1)
+            self._buf, _ = _fold_scan(self._buf,
+                                      jnp.int32(self._num_records),
+                                      blocks, n_blk)
+            self._num_records = total
         self._maybe_spill()
         return self.index
 
+    def view(self) -> tuple[jax.Array, int]:
+        """A consistent (capacity buffer, record count) pair even under a
+        concurrent append — the serving snapshot :mod:`repro.db` caches
+        on.  The buffer is a functional jax array, so the pair stays a
+        bit-exact point-in-time view of the stream forever."""
+        with self._mu:
+            return self._buf, self._num_records
+
     @property
     def index(self) -> policy.BitmapIndex:
-        packed = self._buf[:, :policy.num_words(self._num_records)]
-        return policy.BitmapIndex(packed, self._num_records)
+        buf, n = self.view()
+        return policy.BitmapIndex(buf[:, :policy.num_words(n)], n)
 
 
 def fold_block_indexes(blocks: jax.Array,

@@ -1,1 +1,7 @@
 from repro.serve.step import make_prefill_step, make_decode_step  # noqa: F401
+from repro.serve.step import make_bitmap_query_step  # noqa: F401
+from repro.serve.service import (BitmapService, QueryFuture,  # noqa: F401
+                                 ServiceClosed, ServiceConfig,
+                                 ServiceMetrics, ServiceOverloaded)
+from repro.serve.maintenance import (IndexMaintenance,  # noqa: F401
+                                     MaintenanceExecutor)

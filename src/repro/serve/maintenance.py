@@ -1,0 +1,185 @@
+"""Background store maintenance: spill, compaction, and gc off the append
+path.
+
+The paper's duty cycle only pays off if the ingest path stays on its fast
+track during peak load: a synchronous segment spill (device readback +
+checksummed file write + manifest swap) or a compaction cascade in the
+middle of ``append()`` is exactly the stall the silicon avoids by
+double-buffering its transpose flush.  This module is the software
+analogue:
+
+  * :class:`MaintenanceExecutor` — one daemon worker thread draining a
+    deduplicated task queue.  ``submit(kind, fn)`` enqueues unless a task
+    of that ``kind`` is already pending, so an append storm that crosses
+    the flush threshold a thousand times schedules ONE spill.
+  * :class:`IndexMaintenance` — wires a durable
+    :class:`repro.engine.runtime.StreamingIndexer` onto an executor: the
+    indexer's threshold spill becomes an enqueue (appends return
+    immediately), the spill itself runs the two-phase
+    ``prepare_spill`` / ``commit_spill`` protocol on the worker (crash
+    between the phases loses nothing — the WAL still covers every
+    block), and a committed spill chains a compaction pass, which chains
+    a gc sweep.  Each task reports stats (records flushed, segments
+    merged, bytes reclaimed) into the executor's log.
+
+Serving stays consistent throughout: queries snapshot the in-memory
+packed view (a functional jax array pinned with its record count by the
+indexer mutex), so a spill or merge mid-flight never changes a result
+bit.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+from typing import Callable
+
+__all__ = ["MaintenanceExecutor", "IndexMaintenance"]
+
+
+class MaintenanceExecutor:
+    """One background worker, a deduplicated task queue, and a bounded
+    log of what ran.  Tasks are ``fn() -> dict`` (the dict is the task's
+    stats line); exceptions are captured into :attr:`errors`, never
+    propagated into the worker loop."""
+
+    def __init__(self, *, name: str = "repro-maintenance",
+                 log_limit: int = 256):
+        self._cv = threading.Condition()
+        self._queue: collections.deque = collections.deque()
+        self._pending: set[str] = set()
+        self._running: str | None = None
+        self._open = True
+        self.counts: collections.Counter = collections.Counter()
+        self.log: collections.deque = collections.deque(maxlen=log_limit)
+        self.errors: list[tuple[str, BaseException]] = []
+        self._thread = threading.Thread(target=self._run, name=name,
+                                        daemon=True)
+        self._thread.start()
+
+    def submit(self, kind: str, fn: Callable[[], dict | None]) -> bool:
+        """Enqueue ``fn`` under ``kind`` unless one is already pending;
+        returns whether it was enqueued.  Never blocks (the whole point:
+        this is what the append path calls)."""
+        with self._cv:
+            if not self._open:
+                raise RuntimeError("maintenance executor is closed")
+            if kind in self._pending:
+                return False
+            self._pending.add(kind)
+            self._queue.append((kind, fn))
+            self._cv.notify_all()
+            return True
+
+    def flush(self, timeout: float | None = None) -> bool:
+        """Block until the queue is empty and no task is running (tasks
+        enqueued by running tasks included); returns False on timeout."""
+        with self._cv:
+            return self._cv.wait_for(
+                lambda: not self._queue and self._running is None,
+                timeout=timeout)
+
+    def close(self, *, timeout: float | None = None) -> None:
+        """Drain outstanding tasks, then stop the worker.  Idempotent."""
+        with self._cv:
+            if not self._open:
+                return
+            self.flush(timeout=timeout)
+            self._open = False
+            self._cv.notify_all()
+        self._thread.join(timeout=timeout)
+
+    def stats(self) -> dict:
+        """Completed-task counters + the most recent stats line per
+        kind."""
+        with self._cv:
+            last: dict[str, dict] = {}
+            for kind, info in self.log:
+                last[kind] = info
+            return {"completed": dict(self.counts),
+                    "pending": len(self._queue),
+                    "errors": len(self.errors), "last": last}
+
+    # ------------------------------------------------------------- worker
+    def _run(self) -> None:
+        while True:
+            with self._cv:
+                while self._open and not self._queue:
+                    self._cv.wait()
+                if not self._queue:
+                    return                      # closed and drained
+                kind, fn = self._queue.popleft()
+                self._pending.discard(kind)
+                self._running = kind
+            try:
+                info = fn()
+            except BaseException as e:          # noqa: BLE001 — logged
+                info = {"error": repr(e)}
+                with self._cv:
+                    self.errors.append((kind, e))
+            with self._cv:
+                self.counts[kind] += 1
+                self.log.append((kind, info or {}))
+                self._running = None
+                self._cv.notify_all()
+
+
+class IndexMaintenance:
+    """Moves a durable session's spill/compaction/gc onto a
+    :class:`MaintenanceExecutor` (see module docstring).  ``detach()``
+    restores synchronous threshold spills and the store's auto
+    compaction."""
+
+    def __init__(self, indexer, executor: MaintenanceExecutor):
+        if indexer is None or indexer.store is None:
+            raise ValueError("IndexMaintenance needs a store-attached "
+                             "StreamingIndexer")
+        self.si = indexer
+        self.store = indexer.store
+        self.ex = executor
+        self._auto_compact_prev = self.store.auto_compact
+        self.store.auto_compact = False        # compaction is OUR task now
+        self.si.set_spill_hook(self.schedule_spill)
+
+    def schedule_spill(self) -> None:
+        """The indexer's threshold hook: runs on the appending thread,
+        only enqueues (deduplicated)."""
+        self.ex.submit("spill", self._spill)
+
+    def schedule_compact(self) -> None:
+        self.ex.submit("compact", self._compact)
+
+    def schedule_gc(self) -> None:
+        self.ex.submit("gc", self._gc)
+
+    def detach(self) -> None:
+        self.si.set_spill_hook(None)
+        self.store.auto_compact = self._auto_compact_prev
+
+    # -------------------------------------------------------------- tasks
+    def _spill(self) -> dict:
+        token = self.si.prepare_spill()        # slow: readback + file write
+        if token is None:
+            return {"flushed_records": 0}
+        try:
+            self.si.commit_spill(token)        # fast: manifest swap
+        except BaseException:
+            self.si.abort_spill(token)
+            raise
+        self.schedule_compact()
+        self.schedule_gc()                     # rotated WALs are garbage now
+        meta = token[0]
+        return {"flushed_records": meta.num_records, "segment": meta.file}
+
+    def _compact(self) -> dict:
+        st = self.store.compact()
+        if st.merges:
+            self.schedule_gc()                 # merges created garbage
+        return {"merges": st.merges, "segments_merged": st.segments_merged,
+                "bytes_written": st.bytes_written,
+                "bytes_reclaimed": st.bytes_reclaimed}
+
+    def _gc(self) -> dict:
+        st = self.store.gc()
+        return {"removed": len(st.removed),
+                "bytes_reclaimed": st.bytes_reclaimed,
+                "skipped_inflight": len(st.skipped_inflight)}

@@ -1,0 +1,590 @@
+"""`BitmapService` — the async serving port over a `BitmapDB` session.
+
+The paper's core is duty-cycled silicon: full-throughput bitwise passes
+while work is queued, clock-gated near-zero-power standby the moment it
+is not.  The serving surface this module replaces (`serve_step`'s bare
+function) could not express that cycle — every caller hand-assembled its
+own batches, and concurrent callers never coalesced into the wide
+dispatches that make the engine's bucketed executors pay off.  The
+service is the missing lifecycle port:
+
+  * **submit/drain/close** — ``submit(query)`` returns a
+    :class:`QueryFuture` immediately; a deadline-driven micro-batch
+    scheduler coalesces everything submitted within ``max_delay_ms`` (or
+    up to ``max_batch``) from ANY number of threads into ONE
+    ``query_many`` batch — plan-shape bucketing then serves the whole
+    coalesced batch in a handful of vmapped dispatches.  Results are
+    bit-identical to sequential ``serve_step`` calls, resolved in
+    submission order (a caller's futures never complete out of order).
+  * **admission control** — a bounded queue (``max_queue``):
+    ``admission="block"`` applies backpressure to submitters,
+    ``admission="reject"`` raises :class:`ServiceOverloaded` (load-shed).
+  * **standby** — idle past ``idle_after_ms``, the scheduler quiesces
+    into a standby state; the energy meter switches from active to
+    standby power (the calibrated silicon model via
+    :class:`repro.core.elastic.ElasticScheduler` — CG+RBB by default),
+    and the next submission wakes it.  ``metrics()`` reports the
+    active/standby joule split, latency percentiles, throughput, energy
+    per query, coalesced batch sizes, and the session's plan-cache
+    health.
+  * **background maintenance** — durable sessions detach segment spill,
+    compaction, and gc from the append path onto a
+    :class:`repro.serve.maintenance.MaintenanceExecutor`: ``append()``
+    only logs to the WAL and splices in memory; the flush threshold
+    enqueues a two-phase background spill (crash between file write and
+    manifest swap loses nothing).  Serving reads a snapshot-consistent
+    packed view throughout.
+
+``background=False`` gives a one-shot synchronous service (no threads):
+submissions queue, ``drain()``/``flush()`` executes everything on the
+calling thread in coalesced batches — what
+:func:`repro.serve.step.make_bitmap_query_step` wraps.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import threading
+import time
+from typing import Sequence
+
+import jax
+import numpy as np
+
+from repro.core.bic import BICConfig, PaperConfig
+from repro.core.elastic import ElasticScheduler, EnergyReport, PowerState
+
+__all__ = ["BitmapService", "ServiceConfig", "ServiceMetrics",
+           "QueryFuture", "ServiceOverloaded", "ServiceClosed"]
+
+
+class ServiceOverloaded(RuntimeError):
+    """Admission control rejected (or timed out) a submission."""
+
+
+class ServiceClosed(RuntimeError):
+    """submit() after close()."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ServiceConfig:
+    """Knobs of one :class:`BitmapService` (see module docstring)."""
+    max_batch: int = 256          # widest coalesced dispatch
+    max_delay_ms: float = 2.0     # oldest request waits at most this long
+    max_queue: int = 8192         # admission bound (queued, not in-flight)
+    admission: str = "block"      # "block" (backpressure) | "reject"
+    idle_after_ms: float = 100.0  # awake-idle this long -> standby
+    background: bool = True       # False: one-shot synchronous mode
+    maintenance: bool = True      # background spill/compact/gc (durable)
+    #: serve batches with power-of-two padded result arrays (futures
+    #: index their real slice): varying coalesced batch sizes then reuse
+    #: compiled shapes instead of paying first-sight jit retraces
+    pad_output: bool = True
+    latency_window: int = 8192    # per-request latency samples kept
+    bic_config: BICConfig = PaperConfig
+    power_state: PowerState = PowerState()
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if self.max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if self.admission not in ("block", "reject"):
+            raise ValueError(f"admission must be 'block' or 'reject', "
+                             f"got {self.admission!r}")
+
+
+class QueryFuture:
+    """Handle to one submitted query.  Resolves to its slice of the
+    coalesced batch; ``.rows``/``.count``/``.ids`` block until then
+    (mirroring :class:`repro.db.Result`)."""
+
+    __slots__ = ("query", "_ev", "_rows", "_counts", "_qi", "_n", "_err",
+                 "resolve_seq")
+
+    def __init__(self, query):
+        self.query = query
+        self._ev = threading.Event()
+        self._rows = None
+        self._counts = None
+        self._qi = 0
+        self._n = 0
+        self._err: BaseException | None = None
+        #: global resolution sequence number (set when served) — lets a
+        #: caller verify its futures completed in submission order
+        self.resolve_seq: int = -1
+
+    def _resolve(self, rows, counts, qi: int, n: int) -> None:
+        self._rows, self._counts, self._qi, self._n = rows, counts, qi, n
+        self._ev.set()
+
+    def _reject(self, err: BaseException) -> None:
+        self._err = err
+        self._ev.set()
+
+    def done(self) -> bool:
+        return self._ev.is_set()
+
+    def wait(self, timeout: float | None = None) -> bool:
+        return self._ev.wait(timeout)
+
+    def _ready(self, timeout: float | None = None) -> None:
+        if not self._ev.wait(timeout):
+            raise TimeoutError(f"query not served within {timeout}s")
+        if self._err is not None:
+            raise self._err
+
+    def result(self, timeout: float | None = None):
+        """(packed row (Nw,) uint32, count) — the engine arrays, exactly
+        what a sequential ``serve_step([q])`` call would return for this
+        query.  Blocks until served; raises what the query raised."""
+        self._ready(timeout)
+        return self._rows[self._qi], self._counts[self._qi]
+
+    def exception(self, timeout: float | None = None):
+        self._ev.wait(timeout)
+        return self._err
+
+    @property
+    def rows(self):
+        return self.result()[0]
+
+    @property
+    def count(self) -> int:
+        self._ready()
+        return int(self._counts[self._qi])
+
+    @property
+    def ids(self) -> np.ndarray:
+        """Matching record ordinals (sorted)."""
+        from repro.db.result import unpack_ids
+        return unpack_ids(np.asarray(self.rows), self._n)
+
+    def __repr__(self) -> str:
+        state = ("failed" if self._err is not None
+                 else "done" if self.done() else "pending")
+        return f"<QueryFuture {state} {self.query!r:.60}>"
+
+
+@dataclasses.dataclass
+class ServiceMetrics:
+    """One consistent snapshot of a service's meters (see
+    :meth:`BitmapService.metrics`)."""
+    served: int
+    batches: int
+    rejected: int
+    inflight: int
+    state: str
+    uptime_seconds: float
+    queries_per_sec: float
+    latency_p50_ms: float
+    latency_p99_ms: float
+    latency_mean_ms: float
+    batch_mean: float
+    batch_max: int
+    busy_seconds: float
+    awake_idle_seconds: float
+    standby_seconds: float
+    standby_entries: int
+    wakes: int
+    active_joules: float
+    standby_joules: float
+    energy_per_query_j: float
+    plan_cache: dict
+    maintenance: dict | None
+
+
+class _Item:
+    __slots__ = ("query", "future", "t")
+
+    def __init__(self, query, future, t):
+        self.query, self.future, self.t = query, future, t
+
+
+class BitmapService:
+    """The lifecycle port (use :meth:`open`, or
+    :meth:`repro.db.BitmapDB.serve`); also a context manager."""
+
+    def __init__(self, db, config: ServiceConfig):
+        self._db = db
+        self.config = config
+        self._cv = threading.Condition()
+        self._pending: collections.deque[_Item] = collections.deque()
+        self._inflight = 0             # accepted, not yet resolved
+        self._openflag = True
+        self._state = "active"
+        # --- energy meter: calibrated silicon powers, one virtual core
+        self._sched = ElasticScheduler(1, config.bic_config,
+                                       config.power_state)
+        self._energy = EnergyReport()
+        self._elock = threading.Lock()
+        self._mark = time.perf_counter()
+        self._t_open = self._mark
+        # --- meters
+        self._resolve_seq = 0
+        self._lat = collections.deque(maxlen=config.latency_window)
+        self._batch_sizes = collections.deque(maxlen=4096)
+        self._served = 0
+        self._batches = 0
+        self._rejected = 0
+        self._standby_entries = 0
+        self._wakes = 0
+        self._spans = {"busy": 0.0, "awake": 0.0, "standby": 0.0}
+        # --- background maintenance (durable sessions only)
+        self._maint = None
+        self._maint_ex = None
+        si = getattr(db, "indexer", None)
+        if config.maintenance and si is not None and si.store is not None:
+            from repro.serve.maintenance import (IndexMaintenance,
+                                                 MaintenanceExecutor)
+            self._maint_ex = MaintenanceExecutor()
+            self._maint = IndexMaintenance(si, self._maint_ex)
+        # --- scheduler thread
+        self._thread = None
+        if config.background:
+            self._thread = threading.Thread(
+                target=self._run, name="repro-bitmap-service", daemon=True)
+            self._thread.start()
+
+    # ------------------------------------------------------------ lifecycle
+    @classmethod
+    def open(cls, index, *, config: ServiceConfig | None = None,
+             backend: str = "auto", **kw) -> "BitmapService":
+        """Open a service over a :class:`repro.db.BitmapDB` session (or
+        anything :func:`repro.serve.step.make_bitmap_query_step` accepts:
+        a raw ``BitmapIndex`` / ``StoredIndex`` is wrapped read-only).
+        Extra keywords construct the :class:`ServiceConfig`."""
+        if config is not None and kw:
+            raise ValueError("pass config= or individual keywords, "
+                             "not both")
+        from repro import db as _db
+        if not isinstance(index, _db.BitmapDB):
+            index = _db.BitmapDB.from_index(index, backend=backend)
+        return cls(index, config or ServiceConfig(**kw))
+
+    def __enter__(self) -> "BitmapService":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    @property
+    def db(self):
+        return self._db
+
+    @property
+    def state(self) -> str:
+        """"active" | "standby" | "closed"."""
+        with self._cv:
+            if not self._openflag and self._inflight == 0:
+                return "closed"
+            return self._state
+
+    # --------------------------------------------------------------- submit
+    def submit(self, query, *, timeout: float | None = None) -> QueryFuture:
+        """Enqueue one query (expression / predicate / pre-built plan —
+        anything the session's ``query_many`` accepts); returns its
+        :class:`QueryFuture` immediately.  Admission control applies:
+        with a full queue, ``block`` waits (``timeout`` bounds it),
+        ``reject`` raises :class:`ServiceOverloaded`."""
+        cfg = self.config
+        deadline = (None if timeout is None
+                    else time.perf_counter() + timeout)
+        while True:
+            flush_first = False
+            with self._cv:
+                if not self._openflag:
+                    raise ServiceClosed(
+                        "submit() on a closed BitmapService")
+                if len(self._pending) >= cfg.max_queue:
+                    if not cfg.background:
+                        # one-shot mode has no consumer thread: the
+                        # submitter IS the executor, so a full queue
+                        # flushes here instead of deadlocking
+                        flush_first = True
+                    elif cfg.admission == "reject":
+                        self._rejected += 1
+                        raise ServiceOverloaded(
+                            f"queue full ({cfg.max_queue} pending)")
+                    else:
+                        left = (None if deadline is None
+                                else deadline - time.perf_counter())
+                        if (left is not None and left <= 0) \
+                                or not self._cv.wait(timeout=left):
+                            self._rejected += 1
+                            raise ServiceOverloaded(
+                                f"queue full after {timeout}s "
+                                "backpressure")
+                        continue              # re-check queue + openflag
+                else:
+                    fut = QueryFuture(query)
+                    self._pending.append(
+                        _Item(query, fut, time.perf_counter()))
+                    self._inflight += 1
+                    self._cv.notify_all()
+                    break
+            if flush_first:
+                self._flush_inline()
+        if not cfg.background and len(self._pending) >= cfg.max_batch:
+            self._flush_inline()
+        return fut
+
+    def submit_many(self, queries: Sequence, *,
+                    timeout: float | None = None) -> list[QueryFuture]:
+        return [self.submit(q, timeout=timeout) for q in queries]
+
+    def drain(self, timeout: float | None = None) -> bool:
+        """Block until every accepted submission has resolved (exactly
+        once — nothing dropped, nothing duplicated); returns False on
+        timeout.  In one-shot mode this is also what executes."""
+        if not self.config.background:
+            self._flush_inline()
+        with self._cv:
+            return self._cv.wait_for(lambda: self._inflight == 0,
+                                     timeout=timeout)
+
+    def close(self, timeout: float | None = None) -> None:
+        """Drain, stop the scheduler, flush + detach background
+        maintenance.  Idempotent."""
+        with self._cv:
+            already = not self._openflag
+            self._openflag = False
+            self._cv.notify_all()
+        if not self.config.background:
+            self._flush_inline()
+        if self._thread is not None:
+            self._thread.join(timeout=timeout)
+            self._thread = None
+        if not already and self._maint is not None:
+            # detach FIRST (restores synchronous spills) so an append
+            # racing this close can never hit a closed executor
+            self._maint.detach()
+            self._maint_ex.close(timeout=timeout)
+        with self._elock:
+            self._charge_locked(time.perf_counter())
+
+    def warmup(self, queries: Sequence, *, max_batch: int | None = None
+               ) -> int:
+        """Pre-compile every bucketed executor the scheduler can hit for
+        this query population BEFORE traffic arrives: for each distinct
+        plan shape among ``queries``, run one dispatch at every
+        power-of-two bucket size up to ``max_batch``.  Coalesced batch
+        compositions vary run to run (thread timing decides what lands
+        in a window), so without this a first-sight bucket size pays a
+        jit compile mid-serving — a latency spike standby can't hide.
+        Returns the number of warm dispatches."""
+        from repro.engine import batch as engine_batch
+        from repro.engine import planner
+
+        reps: dict = {}
+        for q in queries:
+            pl = self._db._plan_for(q)
+            if isinstance(pl, planner.CompositePlan):
+                continue                # served out-of-band, no executor
+            _, shape, _, _ = engine_batch._lowered(pl)
+            if shape is not None and shape not in reps:
+                reps[shape] = q
+        cap = max(1, max_batch if max_batch is not None
+                  else self.config.max_batch)
+        dispatches = 0
+        pad = self.config.pad_output
+        for q in reps.values():
+            s = 1
+            while s <= cap:
+                self._db.query_many([q] * s,
+                                    pad_output=pad).materialize()
+                dispatches += 1
+                if s == cap:
+                    break
+                s = min(s * 2, cap)
+        return dispatches
+
+    def standby(self) -> None:
+        """Explicitly drop into standby now (the idle timer does this on
+        its own after ``idle_after_ms``); the next submission wakes."""
+        with self._cv:
+            if self._state == "active":
+                with self._elock:
+                    self._charge_locked(time.perf_counter())
+                self._state = "standby"
+                self._standby_entries += 1
+
+    # ------------------------------------------------------------ scheduler
+    def _run(self) -> None:
+        try:
+            self._run_loop()
+        except BaseException as e:      # noqa: BLE001 — never hang callers
+            with self._cv:
+                self._openflag = False
+                while self._pending:
+                    it = self._pending.popleft()
+                    it.future._reject(e)
+                    self._inflight -= 1
+                self._cv.notify_all()
+            raise
+
+    def _run_loop(self) -> None:
+        cfg = self.config
+        idle_after = cfg.idle_after_ms / 1e3
+        max_delay = cfg.max_delay_ms / 1e3
+        cv = self._cv
+        while True:
+            with cv:
+                # wait for work; a long-enough lull clock-gates us
+                idle_t0 = time.perf_counter()
+                while self._openflag and not self._pending:
+                    if self._state == "active":
+                        if not cv.wait(timeout=idle_after) \
+                                and not self._pending \
+                                and time.perf_counter() - idle_t0 \
+                                >= idle_after:
+                            with self._elock:
+                                self._charge_locked(time.perf_counter())
+                            self._state = "standby"
+                            self._standby_entries += 1
+                    else:
+                        cv.wait()
+                if not self._pending:
+                    break                       # closed and drained
+                if self._state == "standby":
+                    with self._elock:
+                        self._charge_locked(time.perf_counter())
+                    self._state = "active"
+                    self._wakes += 1
+                # batch window: the OLDEST request's deadline drives it
+                deadline = self._pending[0].t + max_delay
+                while (len(self._pending) < cfg.max_batch
+                       and self._openflag):
+                    left = deadline - time.perf_counter()
+                    if left <= 0:
+                        break
+                    cv.wait(timeout=left)
+                take = min(len(self._pending), cfg.max_batch)
+                batch = [self._pending.popleft() for _ in range(take)]
+                cv.notify_all()                 # queue space freed
+            self._execute(batch)
+
+    def _flush_inline(self) -> None:
+        """One-shot mode: run everything queued, on the calling thread,
+        in coalesced batches."""
+        while True:
+            with self._cv:
+                if not self._pending:
+                    return
+                take = min(len(self._pending), self.config.max_batch)
+                batch = [self._pending.popleft() for _ in range(take)]
+                self._cv.notify_all()
+            self._execute(batch)
+
+    def _execute(self, batch: list[_Item]) -> None:
+        with self._elock:                       # waiting span was "awake"
+            self._charge_locked(time.perf_counter())
+        lats: list[float] = []
+        try:
+            rb = self._db.query_many([it.query for it in batch],
+                                     pad_output=self.config.pad_output)
+            # read the record count AFTER query_many snapshots its view:
+            # rows past the view are masked zero, so an at-most-newer n
+            # can only be a harmless over-bound for .ids — the stale
+            # ordering would silently drop freshly appended matches
+            n = self._db.num_records
+            rows, counts = rb.materialize()
+            jax.block_until_ready(rows)
+        except BaseException:
+            # batch-level failure (e.g. one bad key id poisons planning):
+            # isolate per query so one caller's typo cannot fail another
+            # caller's future
+            for it in batch:
+                self._resolve_seq += 1
+                it.future.resolve_seq = self._resolve_seq
+                try:
+                    r, c = self._db.query_many([it.query]).materialize()
+                    jax.block_until_ready(r)
+                    it.future._resolve(r, c, 0, self._db.num_records)
+                except BaseException as e:      # noqa: BLE001 — to future
+                    it.future._reject(e)
+        else:
+            done = time.perf_counter()
+            for qi, it in enumerate(batch):
+                lats.append(done - it.t)
+                self._resolve_seq += 1
+                it.future.resolve_seq = self._resolve_seq
+                it.future._resolve(rows, counts, qi, n)
+        with self._elock:                       # execution span was "busy"
+            self._charge_locked(time.perf_counter(), busy=True)
+        with self._cv:          # meters mutate under the cv (metrics()
+            self._lat.extend(lats)              # snapshots under it too)
+            self._served += len(batch)
+            self._batches += 1
+            self._batch_sizes.append(len(batch))
+            self._inflight -= len(batch)
+            self._cv.notify_all()               # drain()ers
+
+    # --------------------------------------------------------------- energy
+    def _charge_locked(self, now: float, *, busy: bool = False) -> None:
+        """Charge the span since the last mark at the CURRENT mode's
+        power: executing -> active power over busy time; awake-idle ->
+        active power too (the clock is not gated — exactly why standby
+        exists); standby -> the calibrated CG+RBB standby power."""
+        dt = now - self._mark
+        self._mark = now
+        if dt <= 0:
+            return
+        rep = self._energy
+        if busy:
+            rep.active_joules += self._sched.p_active * dt
+            rep.busy_core_seconds += dt
+            self._spans["busy"] += dt
+        elif self._state == "active":
+            rep.active_joules += self._sched.p_active * dt
+            rep.idle_core_seconds += dt
+            self._spans["awake"] += dt
+        else:
+            rep.standby_joules += self._sched.p_standby * dt
+            rep.idle_core_seconds += dt
+            self._spans["standby"] += dt
+
+    @property
+    def energy(self) -> EnergyReport:
+        """The live energy report (charged through the last state
+        change/dispatch; ``metrics()`` charges up to now first)."""
+        return self._energy
+
+    # -------------------------------------------------------------- metrics
+    def metrics(self) -> ServiceMetrics:
+        with self._elock:
+            self._charge_locked(time.perf_counter())
+        with self._cv:          # consistent snapshot vs a live scheduler
+            lat = np.asarray(self._lat, np.float64) * 1e3
+            sizes = np.asarray(self._batch_sizes, np.int64)
+            served = self._served
+        now = time.perf_counter()
+        total_j = self._energy.total_joules
+        maint = self._maint_ex.stats() if self._maint_ex is not None \
+            else None
+        return ServiceMetrics(
+            served=served, batches=self._batches, rejected=self._rejected,
+            inflight=self._inflight, state=self.state,
+            uptime_seconds=now - self._t_open,
+            queries_per_sec=served / max(now - self._t_open, 1e-9),
+            latency_p50_ms=float(np.percentile(lat, 50)) if lat.size
+            else 0.0,
+            latency_p99_ms=float(np.percentile(lat, 99)) if lat.size
+            else 0.0,
+            latency_mean_ms=float(lat.mean()) if lat.size else 0.0,
+            batch_mean=float(sizes.mean()) if sizes.size else 0.0,
+            batch_max=int(sizes.max()) if sizes.size else 0,
+            busy_seconds=self._spans["busy"],
+            awake_idle_seconds=self._spans["awake"],
+            standby_seconds=self._spans["standby"],
+            standby_entries=self._standby_entries, wakes=self._wakes,
+            active_joules=self._energy.active_joules,
+            standby_joules=self._energy.standby_joules,
+            energy_per_query_j=total_j / served if served else 0.0,
+            plan_cache=self._db.cache_stats()
+            if hasattr(self._db, "cache_stats") else {},
+            maintenance=maint)
+
+    def __repr__(self) -> str:
+        return (f"<BitmapService {self.state} served={self._served} "
+                f"pending={len(self._pending)} over {self._db!r}>")

@@ -39,16 +39,49 @@ def make_bitmap_query_step(index, *, backend: str = "auto"):
     workload.  Queries are engine predicate trees, pre-built plans, or
     (when the session carries a schema) ``repro.db`` expressions.
 
+    Since PR 5 this is a thin shim over a synchronous one-shot
+    :class:`repro.serve.service.BitmapService` (``background=False``: no
+    threads, no deferred maintenance — appends keep their synchronous
+    spill semantics): each ``query_step(queries)`` call submits the batch
+    and drains it in coalesced dispatches, bit-identical to the direct
+    ``query_many`` path.  Callers that want cross-caller coalescing,
+    admission control, standby, and background maintenance should hold
+    the service itself — ``BitmapDB.serve()`` /
+    :meth:`repro.serve.service.BitmapService.open`.
+
     ``index`` is a :class:`repro.db.BitmapDB` session (served as-is — its
     schema, stats and plan cache apply), an in-memory
     :class:`repro.engine.policy.BitmapIndex`, or a segment-backed
     :class:`repro.store.StoredIndex` (a spilled/recovered index served
     segment-parallel — stacked into one vmapped dispatch per bucket when
     the segment word counts are uniform)."""
-    from repro import db as _db
-    if isinstance(index, _db.BitmapDB):
-        return index.serve_step()
-    return _db.BitmapDB.from_index(index, backend=backend).serve_step()
+    from repro.serve.service import BitmapService, ServiceConfig
+
+    svc = BitmapService.open(index, backend=backend,
+                             config=ServiceConfig(background=False,
+                                                  maintenance=False,
+                                                  pad_output=False,
+                                                  max_batch=1 << 20,
+                                                  max_queue=1 << 20))
+    db = svc.db
+
+    def query_step(queries):
+        futs = [svc.submit(q) for q in queries]
+        svc.drain()
+        if not futs:
+            return db.query_many([]).materialize()
+        rows, counts = futs[0]._rows, futs[0]._counts
+        if rows is not None \
+                and all(f._err is None and f._rows is rows for f in futs) \
+                and [f._qi for f in futs] == list(range(len(futs))):
+            return rows, counts        # one coalesced batch: zero-copy
+        # multiple coalesced batches — or a failed query, which .rows
+        # re-raises here exactly as the pre-shim step did
+        return (jnp.stack([f.rows for f in futs]),
+                jnp.stack([jnp.asarray(f.result()[1]) for f in futs]))
+
+    query_step.service = svc
+    return query_step
 
 
 def greedy_generate(params, cfg: ModelConfig, tokens, steps: int,

@@ -13,5 +13,6 @@ Public surface:
 """
 from repro.store.format import CorruptFileError  # noqa: F401
 from repro.store.manifest import Manifest, SegmentMeta  # noqa: F401
-from repro.store.store import (SegmentStore, StoredIndex,  # noqa: F401
-                               np_splice, open_index, recover_index)
+from repro.store.store import (CompactionStats, GCStats,  # noqa: F401
+                               SegmentStore, StoredIndex, np_splice,
+                               open_index, recover_index)

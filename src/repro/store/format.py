@@ -167,6 +167,16 @@ def append_log_entry(f: BinaryIO, meta: dict, payload: bytes) -> None:
 def read_log_entries(path: str) -> Iterator[tuple[dict, bytes]]:
     """Yield (meta, payload) per intact entry; a torn/corrupt tail (the
     normal post-crash state) ends iteration instead of raising."""
+    for meta, payload, _ in read_log_entries_from(path, 8):
+        yield meta, payload
+
+
+def read_log_entries_from(path: str, offset: int
+                          ) -> Iterator[tuple[dict, bytes, int]]:
+    """Like :func:`read_log_entries` but starting at byte ``offset``
+    (pass 8 for the whole log) and yielding ``(meta, payload,
+    end_offset)`` — ``end_offset`` is the resume point for an
+    incremental re-read of a log that is still being appended to."""
     try:
         with open(path, "rb") as f:
             data = f.read()
@@ -174,7 +184,7 @@ def read_log_entries(path: str) -> Iterator[tuple[dict, bytes]]:
         return
     if data[:4] != LOG_MAGIC:
         return
-    off = 8
+    off = max(offset, 8)
     while off + 8 <= len(data):
         (blen,) = _U32S.unpack_from(data, off)
         (bcrc,) = _U32S.unpack_from(data, off + 4)
@@ -186,7 +196,7 @@ def read_log_entries(path: str) -> Iterator[tuple[dict, bytes]]:
             return                               # corrupt tail
         (hlen,) = _U32S.unpack_from(body, 0)
         meta = json.loads(body[4:4 + hlen])
-        yield meta, body[4 + hlen:]
+        yield meta, body[4 + hlen:], end
         off = end
 
 

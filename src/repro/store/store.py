@@ -26,6 +26,19 @@ into size tiers (powers of ``compact_fanout`` records) and any run of
 shift/carry splice the streaming path uses.  Merges write the new segment
 first and commit via the manifest, so compaction is crash-safe too.
 
+**Concurrency** — one writer stream, one maintenance thread: the append
+path only ever touches the WAL (:meth:`SegmentStore.log_block`), while
+flushes/compaction/gc mutate the manifest.  A store-internal lock guards
+the WAL handle and every manifest swap; the slow work (segment file
+writes, merge splices) runs OUTSIDE the lock via the two-phase
+:meth:`SegmentStore.prepare_segment` / :meth:`SegmentStore.commit_segment`
+protocol, so appends never wait on a flush.  Blocks logged to the
+outgoing WAL generation while a background flush was preparing are
+carried into the fresh generation *before* the manifest swap — no crash
+instant can lose an acknowledged block.  Files being prepared register as
+in-flight so :meth:`SegmentStore.gc` (which may run concurrently from the
+maintenance executor) never deletes a segment about to be committed.
+
 Because segments partition the *record axis*, query serving never needs the
 whole index resident: :class:`StoredIndex` runs a query batch against each
 segment and OR-splices the per-segment result rows at their record offsets
@@ -35,6 +48,7 @@ from __future__ import annotations
 
 import dataclasses
 import os
+import threading
 from typing import Sequence
 
 import numpy as np
@@ -72,10 +86,73 @@ def np_splice(dst: np.ndarray, start_bit: int, block: np.ndarray,
     dst[:, w0 + 1:cend] |= carry[:, :cend - (w0 + 1)]
 
 
+@dataclasses.dataclass
+class CompactionStats:
+    """What a :meth:`SegmentStore.compact` pass did (or, with
+    ``dry_run=True``, would do).  ``bytes_reclaimed`` counts superseded
+    segment files turned into garbage (actually deleted later by
+    :meth:`SegmentStore.gc`); comparisons against numbers compare the
+    merge count, so ``store.compact() > 0`` keeps reading naturally."""
+    merges: int = 0
+    segments_merged: int = 0
+    bytes_written: int = 0
+    bytes_reclaimed: int = 0
+    dry_run: bool = False
+
+    def __int__(self) -> int:
+        return self.merges
+
+    def __bool__(self) -> bool:
+        return self.merges > 0
+
+    def __eq__(self, other):
+        if isinstance(other, (int, float)):
+            return self.merges == other
+        return super().__eq__(other)
+
+    def __lt__(self, other):
+        return self.merges < other
+
+    def __le__(self, other):
+        return self.merges <= other
+
+    def __gt__(self, other):
+        return self.merges > other
+
+    def __ge__(self, other):
+        return self.merges >= other
+
+
+@dataclasses.dataclass(frozen=True)
+class GCStats:
+    """What a :meth:`SegmentStore.gc` pass removed (or, with
+    ``dry_run=True``, would remove).  Iterates / contains like the plain
+    filename list it used to be."""
+    removed: tuple[str, ...] = ()
+    bytes_reclaimed: int = 0
+    skipped_inflight: tuple[str, ...] = ()
+    dry_run: bool = False
+
+    def __contains__(self, name) -> bool:
+        return name in self.removed
+
+    def __iter__(self):
+        return iter(self.removed)
+
+    def __len__(self) -> int:
+        return len(self.removed)
+
+    def __bool__(self) -> bool:
+        return bool(self.removed)
+
+
 class SegmentStore:
     """One durable index = one store directory.  All mutation goes through
     ``log_block`` (WAL append) and ``write_segment`` (flush + manifest
-    commit); both leave the directory recoverable at every instant."""
+    commit); both leave the directory recoverable at every instant.  An
+    internal lock guards the WAL handle and manifest swaps so one append
+    stream and one maintenance thread can share the store (see the module
+    docstring's concurrency section)."""
 
     def __init__(self, root: str, *, compact_fanout: int = 4,
                  auto_compact: bool = True):
@@ -88,6 +165,19 @@ class SegmentStore:
         self._manifest = load(root) or Manifest(
             version=0, segments=(), wal_generation=0, next_segment_id=0)
         self._wal: wal_mod.WriteAheadLog | None = None
+        self._wal_gen: int | None = None   # generation of the open handle
+        # guards the WAL handle + manifest mutations (never held across a
+        # segment-file write or merge splice — appends must not wait on
+        # maintenance)
+        self._lock = threading.RLock()
+        # serializes segment CREATION (a two-phase flush holds it from
+        # prepare to commit/abort, a merge for its whole body): segment
+        # ids stay unique and every commit runs against a manifest no
+        # other segment writer has moved.  Appends never touch it.
+        self._flush_lock = threading.Lock()
+        # filenames a two-phase flush/merge is writing right now: gc must
+        # treat them (and their .tmp twins) as live, not garbage
+        self._inflight: set[str] = set()
 
     # ------------------------------------------------------------- accessors
     @property
@@ -131,19 +221,39 @@ class SegmentStore:
     # ------------------------------------------------------------------- WAL
     def log_block(self, records: np.ndarray, start: int,
                   tick: int | None = None) -> None:
-        """Durably log a raw record block BEFORE it is spliced in memory."""
-        if self._wal is None:
-            self._wal = wal_mod.WriteAheadLog(self.wal_path())
-        self._wal.append_block(np.asarray(records), start, tick)
+        """Durably log a raw record block BEFORE it is spliced in memory.
+        Holds the store lock only for the framed append itself, so this —
+        the whole append-path footprint on the store — never waits on a
+        segment write or a compaction merge."""
+        with self._lock:
+            if self._wal is None:
+                self._wal = wal_mod.WriteAheadLog(self.wal_path())
+                self._wal_gen = self._manifest.wal_generation
+            self._wal.append_block(np.asarray(records), start, tick)
 
     def replay_wal(self) -> list[tuple[int, np.ndarray, int | None]]:
         """Intact WAL (start, records, tick) blocks not yet covered by a
         committed segment, in stream order — exactly what recovery must
-        re-index."""
-        floor = self.durable_records
-        return [(start, rec, tick)
-                for start, rec, tick in wal_mod.replay(self.wal_path())
-                if start >= floor]
+        re-index.
+
+        Reads the committed generation AND the next one: a rotation
+        installs the fresh generation's handle (appends switch over)
+        *before* the manifest swap, so a crash in that window leaves
+        live blocks in generation g+1 while ``CURRENT`` still names g.
+        Blocks are deduplicated by stream position (carried copies in
+        the fresh generation are byte-identical to their originals), so
+        every rotation crash window replays exactly once."""
+        gen = self._manifest.wal_generation
+        out = []
+        pos = self.durable_records
+        for path in (wal_mod.wal_path(self.root, gen),
+                     wal_mod.wal_path(self.root, gen + 1)):
+            for start, rec, tick in wal_mod.replay(path):
+                if start < pos:
+                    continue        # segment-covered, or a carried dup
+                out.append((start, rec, tick))
+                pos = start + rec.shape[0]
+        return out
 
     # -------------------------------------------------------------- segments
     def segment_path(self, meta: SegmentMeta) -> str:
@@ -172,31 +282,154 @@ class SegmentStore:
         ``tick_watermark`` carries the (tick, blocks) watermark of the
         flushed records into the manifest (it must survive the WAL
         rotation)."""
-        m = self._manifest
-        if start_record != m.durable_records:
-            raise ValueError(
-                f"segment must extend the stream: start={start_record}, "
-                f"durable={m.durable_records}")
+        meta = self.prepare_segment(packed, num_records, start_record)
+        try:
+            self.commit_segment(meta, tick_watermark=tick_watermark)
+        except BaseException:
+            self.abort_segment(meta)    # completes the two-phase op
+            raise
+        return meta
+
+    def prepare_segment(self, packed: np.ndarray, num_records: int,
+                        start_record: int) -> SegmentMeta:
+        """Phase one of a (possibly background) flush: validate and write
+        the immutable segment FILE without touching the manifest — the
+        slow part, safe to run off the append path because appends only
+        ever touch the WAL.  The segment becomes live only at
+        :meth:`commit_segment`; until then gc treats the file as
+        in-flight, not garbage.  Holds the store's flush lock until
+        :meth:`commit_segment` / :meth:`abort_segment` releases it, so
+        no other segment writer (an explicit ``snapshot()`` spill, a
+        compaction merge) can move the manifest — or claim the same
+        segment id — underneath the two-phase flush."""
+        packed = np.ascontiguousarray(packed, dtype=np.uint32)
         if num_records <= 0:
             raise ValueError("segment needs at least one record")
-        packed = np.ascontiguousarray(packed, dtype=np.uint32)
-        if self.num_keys is not None and packed.shape[0] != self.num_keys:
-            raise ValueError(f"segment has {packed.shape[0]} key rows, "
-                             f"store has {self.num_keys}")
         if packed.shape[1] != _num_words(num_records):
             raise ValueError(f"packed shape {packed.shape} does not match "
                              f"{num_records} records")
-        meta = self._write_segment_file(packed, num_records, start_record)
+        self._flush_lock.acquire()
+        try:
+            with self._lock:
+                m = self._manifest
+                if start_record != m.durable_records:
+                    raise ValueError(
+                        f"segment must extend the stream: "
+                        f"start={start_record}, "
+                        f"durable={m.durable_records}")
+                if self.num_keys is not None \
+                        and packed.shape[0] != self.num_keys:
+                    raise ValueError(
+                        f"segment has {packed.shape[0]} key rows, "
+                        f"store has {self.num_keys}")
+                meta = SegmentMeta(segment_id=m.next_segment_id,
+                                   file=f"seg-{m.next_segment_id:08d}.seg",
+                                   start_record=start_record,
+                                   num_records=num_records,
+                                   num_keys=packed.shape[0])
+                self._inflight.add(meta.file)
+            try:
+                fmt.write_array_file(
+                    os.path.join(self.root, meta.file), {"packed": packed},
+                    meta={"segment_id": meta.segment_id,
+                          "start_record": meta.start_record,
+                          "num_records": meta.num_records})
+            except BaseException:
+                with self._lock:
+                    self._inflight.discard(meta.file)
+                raise
+        except BaseException:
+            self._flush_lock.release()
+            raise
+        return meta
+
+    def commit_segment(self, meta: SegmentMeta, *,
+                       tick_watermark: tuple[int, int] | None = None
+                       ) -> None:
+        """Phase two: atomic manifest swap making a prepared segment live
+        (and rotating the WAL generation — blocks logged while the
+        prepare was running are carried into the fresh generation, see
+        :meth:`_commit`).  A crash anywhere before this call leaves only
+        an orphan file; recovery still replays every logged block.
+
+        On FAILURE the flush lock stays held and the segment stays
+        in-flight: the two-phase op is still open, and the caller
+        finishes it with :meth:`abort_segment` (exactly one release —
+        releasing here too would let a second release free some OTHER
+        writer's critical section).
+
+        The store lock is held only for the handle swap plus the tail of
+        the WAL carry-over (normally zero blocks): the bulk copy of the
+        outgoing generation, the fresh generation's creation, and the
+        manifest's fsync-heavy file writes all run outside it, so
+        appends stall for at most one WAL frame.  Crash windows are
+        covered by :meth:`replay_wal`'s two-generation deduplicating
+        read."""
+        m = self._manifest                 # stable: flush lock held
+        if meta.start_record != m.durable_records:
+            raise ValueError(
+                f"segment must extend the stream: "
+                f"start={meta.start_record}, "
+                f"durable={m.durable_records}")
+        # phase A (unlocked): fresh generation file (truncating a stale
+        # one from a crashed prior rotation) + bulk carry-over of blocks
+        # the new manifest will not cover, while appends keep logging to
+        # the outgoing generation.  If a prior commit attempt already
+        # switched the handle to the target generation (its manifest
+        # swap failed), every block at or past this flush's floor is
+        # already there — truncating it would lose them, so both phases
+        # are skipped.
+        target_gen = m.wal_generation + 1
+        if self._wal_gen != target_gen:
+            old_path = wal_mod.wal_path(self.root, m.wal_generation)
+            fresh = wal_mod.WriteAheadLog.create(
+                wal_mod.wal_path(self.root, target_gen))
+            floor = meta.start_record + meta.num_records
+            copied_to = floor
+            entries, read_off = wal_mod.replay_from(old_path, 8)
+            for start, rec, tick in entries:
+                if start >= copied_to:
+                    fresh.append_block(rec, start, tick)
+                    copied_to = start + rec.shape[0]
+            # phase B (locked, brief): catch blocks that raced the bulk
+            # copy, then switch the append stream to the fresh generation
+            with self._lock:
+                if self._wal is not None:
+                    self._wal.close()      # flush the outgoing handle
+                    self._wal = None
+                entries, _ = wal_mod.replay_from(old_path, read_off)
+                for start, rec, tick in entries:
+                    if start >= copied_to:
+                        fresh.append_block(rec, start, tick)
+                        copied_to = start + rec.shape[0]
+                self._wal = fresh
+                self._wal_gen = target_gen
+        # phase C (unlocked): the atomic manifest swap — a crash before
+        # it leaves CURRENT at the old generation, whose blocks replay
+        # (the fresh file's copies dedup away); after it, the fresh
+        # generation is simply current
         tick, blocks = (tick_watermark if tick_watermark is not None
                         else (m.last_tick, m.last_tick_blocks))
         self._commit(dataclasses.replace(
-            m, version=m.version + 1, segments=m.segments + (meta,),
+            m, version=m.version + 1,
+            segments=m.segments + (meta,),
             wal_generation=m.wal_generation + 1,
-            next_segment_id=m.next_segment_id + 1,
+            next_segment_id=max(m.next_segment_id,
+                                meta.segment_id + 1),
             last_tick=tick, last_tick_blocks=blocks))
+        with self._lock:
+            self._inflight.discard(meta.file)
+        self._flush_lock.release()
         if self.auto_compact:
             self.compact()
-        return meta
+
+    def abort_segment(self, meta: SegmentMeta) -> None:
+        """Drop a prepared-but-never-committed segment's in-flight marker
+        (its orphan file becomes ordinary gc fodder) and release the
+        flush lock."""
+        with self._lock:
+            self._inflight.discard(meta.file)
+        self._flush_lock.release()
 
     def _write_segment_file(self, packed: np.ndarray, num_records: int,
                             start_record: int) -> SegmentMeta:
@@ -216,11 +449,15 @@ class SegmentStore:
         return meta
 
     def _commit(self, new: Manifest) -> None:
+        """Atomic manifest swap.  The fsync-heavy file writes run
+        without the store lock (appends never wait on them); only the
+        in-memory manifest pointer flips under it.  WAL rotation is NOT
+        handled here — :meth:`commit_segment` owns the three-phase
+        rotation protocol; non-rotating commits (compaction merges)
+        leave the WAL handle untouched."""
         commit(self.root, new)
-        self._manifest = new
-        if self._wal is not None:           # rotated: next log_block reopens
-            self._wal.close()
-            self._wal = None
+        with self._lock:
+            self._manifest = new
 
     # ------------------------------------------------------------ compaction
     def _tier(self, num_records: int) -> int:
@@ -232,20 +469,48 @@ class SegmentStore:
             bound *= self.compact_fanout
         return tier
 
-    def compact(self) -> int:
+    def compact(self, *, dry_run: bool = False) -> CompactionStats:
         """Tiered merge: while any ``compact_fanout``-long run of adjacent
         same-tier segments exists, splice it into one segment (write new
-        file, atomic manifest swap).  Returns the number of merges."""
-        merges = 0
+        file, atomic manifest swap).  Returns :class:`CompactionStats`
+        (int-comparable as the merge count).  ``dry_run=True`` simulates
+        the cascade without writing anything — ``bytes_written`` is then
+        the merged payload estimate, not a measured file size."""
+        stats = CompactionStats(dry_run=dry_run)
+        if dry_run:
+            segs = list(self._manifest.segments)
+            while True:
+                run = self._find_run(segs)
+                if run is None:
+                    return stats
+                lo, hi = run
+                total = sum(s.num_records for s in segs[lo:hi])
+                stats.merges += 1
+                stats.segments_merged += hi - lo
+                stats.bytes_reclaimed += sum(
+                    self._file_size(s.file) for s in segs[lo:hi])
+                stats.bytes_written += (
+                    segs[lo].num_keys * _num_words(total) * 4)
+                segs[lo:hi] = [dataclasses.replace(
+                    segs[lo], num_records=total)]
         while True:
-            run = self._find_run()
-            if run is None:
-                return merges
-            self._merge(*run)
-            merges += 1
+            # each merge recomputes its run under the flush lock, so a
+            # spill committed (or another compact pass run) between
+            # iterations can never be merged against stale positions
+            with self._flush_lock:
+                run = self._find_run(self._manifest.segments)
+                if run is None:
+                    return stats
+                self._merge(*run, stats=stats)
 
-    def _find_run(self) -> tuple[int, int] | None:
-        segs = self._manifest.segments
+    def _file_size(self, name: str) -> int:
+        try:
+            return os.path.getsize(os.path.join(self.root, name))
+        except OSError:
+            return 0
+
+    def _find_run(self, segs: Sequence[SegmentMeta]
+                  ) -> tuple[int, int] | None:
         i = 0
         while i < len(segs):
             j = i
@@ -258,7 +523,11 @@ class SegmentStore:
             i += 1
         return None
 
-    def _merge(self, lo: int, hi: int) -> None:
+    def _merge(self, lo: int, hi: int, *,
+               stats: CompactionStats | None = None) -> None:
+        """Merge segments[lo:hi] (caller holds the flush lock, so the
+        manifest's segment set cannot move under the slow splice — only
+        WAL appends proceed concurrently)."""
         m = self._manifest
         run = m.segments[lo:hi]
         total = sum(s.num_records for s in run)
@@ -267,11 +536,24 @@ class SegmentStore:
         for s in run:
             np_splice(merged, at, self.read_segment(s), s.num_records)
             at += s.num_records
-        meta = self._write_segment_file(merged, total, run[0].start_record)
-        self._commit(dataclasses.replace(
-            m, version=m.version + 1,
-            segments=m.segments[:lo] + (meta,) + m.segments[hi:],
-            next_segment_id=m.next_segment_id + 1))
+        with self._lock:       # a concurrent gc must not eat the new file
+            self._inflight.add(f"seg-{m.next_segment_id:08d}.seg")
+        try:
+            meta = self._write_segment_file(merged, total,
+                                            run[0].start_record)
+            self._commit(dataclasses.replace(
+                m, version=m.version + 1,
+                segments=m.segments[:lo] + (meta,) + m.segments[hi:],
+                next_segment_id=m.next_segment_id + 1))
+        finally:
+            with self._lock:
+                self._inflight.discard(f"seg-{m.next_segment_id:08d}.seg")
+        if stats is not None:
+            stats.merges += 1
+            stats.segments_merged += hi - lo
+            stats.bytes_written += self._file_size(meta.file)
+            stats.bytes_reclaimed += sum(self._file_size(s.file)
+                                         for s in run)
 
     # ------------------------------------------------------------- bulk read
     def load_packed(self) -> tuple[np.ndarray, int]:
@@ -290,30 +572,63 @@ class SegmentStore:
         return out, n
 
     # -------------------------------------------------------------------- gc
-    def gc(self) -> list[str]:
+    def gc(self, *, dry_run: bool = False) -> GCStats:
         """Delete files unreachable from CURRENT (orphan segments from
-        crashed flushes, superseded manifests, rotated WALs)."""
-        m = self._manifest
-        keep = {"CURRENT", f"MANIFEST-{m.version:08d}.json",
-                os.path.basename(self.wal_path())}
-        keep |= {s.file for s in m.segments}
-        removed = []
-        for name in os.listdir(self.root):
-            if name in keep:
-                continue
+        crashed flushes, superseded manifests, rotated WALs).  Safe to run
+        concurrently with a background flush: files registered in-flight
+        by :meth:`prepare_segment` / a compaction merge (and their
+        ``.tmp`` twins, which an atomic write is about to replace) are
+        skipped, not collected — without the guard a gc racing a spill
+        could delete the very segment the next manifest swap commits.
+        ``dry_run=True`` only reports.  Returns :class:`GCStats`
+        (iterable/containment-compatible with the old filename list)."""
+        names = sorted(os.listdir(self.root))
+        removed, skipped = [], []
+        reclaimed = 0
+        for name in names:
             # includes stale .tmp files (crash mid-atomic-write): the
-            # atomic writers finish their replace before returning, so an
-            # unreferenced .tmp is never about to become live
-            if (name.startswith(("seg-", "wal-", "MANIFEST-"))
+            # atomic writers finish their replace before returning, so
+            # an unreferenced, not-in-flight .tmp is never about to
+            # become live
+            if not (name.startswith(("seg-", "wal-", "MANIFEST-"))
                     or name.endswith(".tmp")):
-                os.remove(os.path.join(self.root, name))
+                continue
+            # the lock is taken PER FILE, with liveness re-checked under
+            # it right before the unlink: an append (log_block) waits at
+            # most one unlink, never the whole sweep — and a segment id
+            # reused after an abort can't be deleted just as a new
+            # prepare re-writes its file
+            with self._lock:
+                m = self._manifest
+                # gen+1 stays live too: a rotation in flight (or crashed
+                # pre-swap) may hold the stream's tail there (see
+                # replay_wal)
+                keep = {"CURRENT", f"MANIFEST-{m.version:08d}.json",
+                        os.path.basename(self.wal_path()),
+                        os.path.basename(wal_mod.wal_path(
+                            self.root, m.wal_generation + 1))}
+                keep |= {s.file for s in m.segments}
+                if name in keep:
+                    continue
+                if name in self._inflight \
+                        or name.removesuffix(".tmp") in self._inflight:
+                    skipped.append(name)
+                    continue
+                reclaimed += self._file_size(name)
+                if not dry_run:
+                    try:
+                        os.remove(os.path.join(self.root, name))
+                    except FileNotFoundError:
+                        pass            # someone else collected it
                 removed.append(name)
-        return removed
+        return GCStats(tuple(removed), reclaimed, tuple(skipped), dry_run)
 
     def close(self) -> None:
-        if self._wal is not None:
-            self._wal.close()
-            self._wal = None
+        with self._lock:
+            if self._wal is not None:
+                self._wal.close()
+                self._wal = None
+                self._wal_gen = None
 
 
 # --------------------------------------------------------- queryable handle

@@ -48,6 +48,20 @@ class WriteAheadLog:
             self._f.truncate(intact)
         self._f.seek(intact)
 
+    @classmethod
+    def create(cls, path: str) -> "WriteAheadLog":
+        """Open ``path`` as a FRESH generation, truncating any leftover
+        bytes.  Rotation uses this instead of ``__init__``: a crash after
+        a rotation pre-wrote the next generation but before its manifest
+        swap leaves a stale file whose intact entries must NOT survive
+        into the generation's real lifetime."""
+        wal = cls.__new__(cls)
+        wal.path = path
+        wal._f = open(path, "wb")
+        fmt.write_log_header(wal._f)
+        fmt.fsync_dir(os.path.dirname(path) or ".")
+        return wal
+
     def append_block(self, records: np.ndarray, start: int,
                      tick: int | None = None) -> None:
         """Durably log a record block whose first record has absolute
@@ -69,9 +83,19 @@ def replay(path: str) -> list[tuple[int, np.ndarray, int | None]]:
     """All intact (start, records, tick) entries of a log, in append
     order.  Torn/corrupt tails (crash mid-append) are dropped, not
     raised."""
+    return replay_from(path, 8)[0]
+
+
+def replay_from(path: str, offset: int
+                ) -> tuple[list[tuple[int, np.ndarray, int | None]], int]:
+    """Intact (start, records, tick) entries from byte ``offset``
+    onward, plus the byte offset one past the last intact frame — so a
+    rotation can bulk-copy a live log outside the store lock and then
+    catch only the raced tail under it."""
     out = []
-    for meta, payload in fmt.read_log_entries(path):
+    end = offset
+    for meta, payload, end in fmt.read_log_entries_from(path, offset):
         arr = np.frombuffer(payload, dtype=np.dtype(meta["dtype"]))
         out.append((meta["start"], arr.reshape(meta["shape"]),
                     meta.get("tick")))
-    return out
+    return out, end

@@ -1,0 +1,515 @@
+"""Acceptance suite for the `repro.serve.service` serving port.
+
+Covers the micro-batch scheduler (threaded submit storm bit-identical to
+sequential `serve_step` calls, per-caller ordering), `drain()`/`close()`
+semantics (every accepted future answered exactly once), admission
+control (block with timeout / reject), error isolation, the standby duty
+cycle and its energy split, background maintenance (appends never block
+on a spill, crash window between background segment write and manifest
+swap recovers bit-exactly, the WAL carry-over of appends racing a
+flush), the gc in-flight guard, compaction/gc stats, the bounded plan
+caches, and the data-pipeline prefetch path.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro
+from repro.db import BitmapDB, Column, Schema, col
+from repro.engine import backends
+from repro.engine.planner import key
+from repro.serve.service import (BitmapService, ServiceClosed,
+                                 ServiceConfig, ServiceOverloaded)
+from repro.serve.step import make_bitmap_query_step
+from repro.store import SegmentStore
+
+
+# ----------------------------------------------------------------- fixtures
+def _schema(m: int = 16) -> Schema:
+    half = m // 2
+    return Schema([Column.categorical("a", list(range(half))),
+                   Column.categorical("b", list(range(half, m)))])
+
+
+def _records(rng, n: int, m: int = 16) -> np.ndarray:
+    half = m // 2
+    return np.stack([rng.integers(0, half, n, dtype=np.int32),
+                     rng.integers(half, m, n, dtype=np.int32)], axis=1)
+
+
+def _mk_db(n: int = 2048, m: int = 16, seed: int = 0) -> BitmapDB:
+    db = BitmapDB(_schema(m), backend="ref")
+    db.append_encoded(_records(np.random.default_rng(seed), n, m))
+    return db
+
+
+def _mixed_queries(rng, m: int, count: int) -> list:
+    half = m // 2
+    qs = []
+    for i in range(count):
+        fam = i % 4
+        if fam == 0:
+            qs.append(col("a") == int(rng.integers(0, half)))
+        elif fam == 1:
+            qs.append((col("a") == int(rng.integers(0, half)))
+                      & ~(col("b") == int(rng.integers(half, m))))
+        elif fam == 2:
+            qs.append(key(int(rng.integers(0, m)))
+                      | key(int(rng.integers(0, m))))
+        else:
+            qs.append((key(int(rng.integers(0, m)))
+                       | key(int(rng.integers(0, m))))
+                      & key(int(rng.integers(0, m))))
+    return qs
+
+
+# ----------------------------------------------------- micro-batch identity
+def test_threaded_storm_bit_identical_to_sequential_step():
+    """Queries submitted concurrently from many threads coalesce into
+    micro-batches whose results are bit-identical to one-at-a-time
+    serve_step calls, and each caller's futures resolve in its
+    submission order."""
+    db = _mk_db()
+    rng = np.random.default_rng(3)
+    queries = _mixed_queries(rng, 16, 120)
+    step = db.serve_step()
+    seq = [step([q]) for q in queries]
+
+    with db.serve(max_delay_ms=2.0, max_batch=32,
+                  idle_after_ms=1000.0) as svc:
+        lanes = [queries[t::4] for t in range(4)]
+        outs: list[list] = [[] for _ in range(4)]
+
+        def caller(t):
+            for q in lanes[t]:
+                outs[t].append(svc.submit(q))
+
+        threads = [threading.Thread(target=caller, args=(t,))
+                   for t in range(4)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        assert svc.drain(timeout=60)
+        m = svc.metrics()
+        assert m.served == len(queries)
+        assert m.batches <= len(queries)   # coalesced, not per-query
+        for t in range(4):
+            seqs = [f.resolve_seq for f in outs[t]]
+            assert seqs == sorted(seqs), "per-caller order violated"
+            for q, f in zip(lanes[t], outs[t]):
+                i = queries.index(q)
+                rows, counts = seq[i]
+                rr, cc = f.result()
+                assert bool(jnp.all(rows[0] == rr))
+                assert int(counts[0]) == int(cc)
+
+
+def test_serve_step_shim_matches_query_many():
+    """make_bitmap_query_step (now a one-shot service shim) stays
+    bit-identical to the direct query_many path, including the empty
+    batch."""
+    db = _mk_db(n=512)
+    rng = np.random.default_rng(5)
+    queries = _mixed_queries(rng, 16, 40)
+    step = make_bitmap_query_step(db)
+    rows, counts = step(queries)
+    want_r, want_c = db.query_many(queries).materialize()
+    assert bool(jnp.all(rows == want_r)) and bool(jnp.all(counts == want_c))
+    er, ec = step([])
+    assert er.shape[0] == 0 and ec.shape[0] == 0
+    with pytest.raises(Exception):      # bad query raises, like pre-shim
+        step([key(999)])
+    step.service.close()
+
+
+def test_query_many_pad_output_semantics():
+    """pad_output=True pads the materialized query axis to a power of
+    two; the handles still cover exactly the submitted queries,
+    bit-identical to the unpadded path."""
+    db = _mk_db(n=512)
+    qs = _mixed_queries(np.random.default_rng(41), 16, 10)
+    rb = db.query_many(qs, pad_output=True)
+    rows, counts = rb.materialize()
+    assert rows.shape[0] == 16 and counts.shape[0] == 16
+    want_r, want_c = db.query_many(qs).materialize()
+    assert bool(jnp.all(rows[:10] == want_r))
+    assert bool(jnp.all(counts[:10] == want_c))
+    assert len(rb) == 10 and len(rb.all_ids()) == 10
+    for i in range(10):
+        assert int(rb[i].count) == int(want_c[i])
+
+
+def test_service_warmup_counts_dispatches():
+    db = _mk_db(n=256)
+    with db.serve(max_batch=8, idle_after_ms=10_000.0) as svc:
+        qs = _mixed_queries(np.random.default_rng(43), 16, 20)
+        n1 = svc.warmup(qs)
+        assert n1 > 0
+        f = svc.submit(qs[0])
+        assert int(f.count) == db.query(qs[0]).count
+
+
+def test_future_surface():
+    db = _mk_db(n=256)
+    with db.serve(max_delay_ms=0.5) as svc:
+        f = svc.submit(col("a") == 1)
+        r, c = f.result(timeout=30)
+        assert f.done() and f.exception() is None
+        want = db.query(col("a") == 1)
+        assert int(c) == want.count
+        np.testing.assert_array_equal(f.ids, want.ids)
+        assert f.count == want.count
+
+
+# ------------------------------------------------------- drain/close/errors
+def test_drain_and_close_answer_every_future_exactly_once():
+    db = _mk_db(n=512)
+    svc = db.serve(max_delay_ms=50.0, max_batch=64)
+    futs = [svc.submit(q)
+            for q in _mixed_queries(np.random.default_rng(7), 16, 90)]
+    svc.close()                         # close implies drain
+    seqs = sorted(f.resolve_seq for f in futs)
+    assert all(f.done() for f in futs), "close() dropped futures"
+    assert seqs == list(range(1, len(futs) + 1)), \
+        "every future answered exactly once"
+    with pytest.raises(ServiceClosed):
+        svc.submit(col("a") == 0)
+    svc.close()                         # idempotent
+    assert svc.state == "closed"
+
+
+def test_admission_reject_and_block_timeout():
+    db = _mk_db(n=256)
+    # a scheduler that never fires within the test window: the queue is
+    # all admission control sees
+    cfg = ServiceConfig(max_batch=10_000, max_delay_ms=60_000.0,
+                        max_queue=4, admission="reject")
+    svc = BitmapService(db, cfg)
+    for i in range(4):
+        svc.submit(col("a") == (i % 8))
+    with pytest.raises(ServiceOverloaded):
+        svc.submit(col("a") == 5)
+    assert svc.metrics().rejected == 1
+    svc.close()                         # still answers the queued four
+
+    cfg = ServiceConfig(max_batch=10_000, max_delay_ms=60_000.0,
+                        max_queue=2, admission="block")
+    svc = BitmapService(db, cfg)
+    svc.submit(col("a") == 0)
+    svc.submit(col("a") == 1)
+    t0 = time.perf_counter()
+    with pytest.raises(ServiceOverloaded):
+        svc.submit(col("a") == 2, timeout=0.05)
+    assert time.perf_counter() - t0 >= 0.04
+    svc.close()
+
+
+def test_error_isolation_per_future():
+    """One caller's bad query fails ITS future; everyone else's results
+    are unaffected (and bit-identical to the sequential path)."""
+    db = _mk_db(n=256)
+    good1, bad, good2 = (col("a") == 2), key(999), (col("b") == 9)
+    with db.serve(max_delay_ms=20.0, max_batch=16) as svc:
+        f1, fb, f2 = svc.submit_many([good1, bad, good2])
+        svc.drain(timeout=60)
+        assert isinstance(fb.exception(), Exception)
+        with pytest.raises(Exception):
+            fb.result()
+        assert int(f1.count) == db.query(good1).count
+        assert int(f2.count) == db.query(good2).count
+
+
+# ------------------------------------------------------------ standby cycle
+def test_standby_transitions_and_energy_split():
+    db = _mk_db(n=256)
+    with db.serve(max_delay_ms=0.5, idle_after_ms=5.0) as svc:
+        svc.submit(col("a") == 1)
+        assert svc.drain(timeout=60)
+        deadline = time.time() + 10
+        while svc.state != "standby" and time.time() < deadline:
+            time.sleep(0.005)
+        assert svc.state == "standby"
+        time.sleep(0.02)                # accrue standby joules
+        m = svc.metrics()
+        assert m.standby_entries >= 1
+        assert m.standby_joules > 0.0
+        assert m.active_joules > 0.0
+        # standby power is orders of magnitude below active power
+        assert (m.standby_joules / max(m.standby_seconds, 1e-9)
+                < m.active_joules / max(m.busy_seconds
+                                        + m.awake_idle_seconds, 1e-9) / 1e3)
+        # a new submission wakes the scheduler
+        f = svc.submit(col("a") == 2)
+        f.result(timeout=30)
+        assert svc.metrics().wakes >= 1
+
+
+def test_explicit_standby_and_metrics_shape():
+    db = _mk_db(n=256)
+    svc = db.serve(max_delay_ms=0.5, idle_after_ms=10_000.0)
+    f = svc.submit(col("a") == 0)
+    f.result(timeout=30)
+    svc.standby()
+    assert svc.state == "standby"
+    m = svc.metrics()
+    assert m.served == 1 and m.batches >= 1
+    assert m.plan_cache["misses"] >= 1
+    svc.close()
+
+
+# ----------------------------------------------------- background maintenance
+def _append_blocks(db, rng, nblocks, block, m=16):
+    blocks = [_records(rng, block, m) for _ in range(nblocks)]
+    for b in blocks:
+        db.append_encoded(b)
+    return blocks
+
+
+def test_background_maintenance_spills_compacts_and_recovers(tmp_path):
+    path = os.path.join(str(tmp_path), "idx")
+    db = BitmapDB(_schema(), path=path, spill_records=128, backend="ref")
+    svc = db.serve(max_delay_ms=1.0)
+    assert svc._maint is not None
+    rng = np.random.default_rng(11)
+    blocks = _append_blocks(db, rng, 16, 64)
+    # serving stays correct while maintenance churns
+    q = col("a") == 3
+    want_ids = db.query(q).ids
+    assert svc._maint_ex.flush(timeout=60)
+    st = svc._maint_ex.stats()
+    assert st["completed"].get("spill", 0) >= 1
+    assert st["errors"] == 0
+    assert db.store.durable_records > 0
+    np.testing.assert_array_equal(svc.submit(q).ids, want_ids)
+    svc.close()
+    # restart: manifest + WAL recovery is bit-exact vs a full rebuild
+    keys = jnp.arange(16, dtype=jnp.int32)
+    want = backends.get_backend("ref").create_index(
+        jnp.asarray(np.concatenate(blocks)), keys)
+    db2 = repro.open(path, backend="ref")
+    assert db2.num_records == 16 * 64
+    assert bool(jnp.all(db2.index.packed == want))
+
+
+def test_append_never_blocks_on_slow_spill(tmp_path, monkeypatch):
+    """With background maintenance, append() latency is independent of
+    segment-write latency: a spill artificially slowed to 600ms must not
+    stall any append for even a third of that (appends do their own
+    ~tens-of-ms of indexing work — the assertion is about not
+    serializing behind the flush, so the simulated flush dwarfs it)."""
+    slow = 0.6
+    orig = SegmentStore.prepare_segment
+
+    def slow_prepare(self, *a, **kw):
+        time.sleep(slow)
+        return orig(self, *a, **kw)
+
+    monkeypatch.setattr(SegmentStore, "prepare_segment", slow_prepare)
+    path = os.path.join(str(tmp_path), "idx")
+    # capacity sized for the whole stream: append latency must measure
+    # the spill interaction, not the (documented, pre-existing) capacity
+    # growth retrace
+    db = BitmapDB(_schema(), path=path, spill_records=64, backend="ref",
+                  capacity_words=64)
+    svc = db.serve()
+    rng = np.random.default_rng(13)
+    blocks = [_records(rng, 64) for _ in range(8)]
+    db.append_encoded(blocks[0])        # warm the jit traces
+    worst = 0.0
+    for b in blocks[1:]:
+        t0 = time.perf_counter()
+        db.append_encoded(b)
+        worst = max(worst, time.perf_counter() - t0)
+    assert worst < slow / 3, \
+        f"append blocked {worst:.3f}s on a {slow}s background spill"
+    assert svc._maint_ex.flush(timeout=60)
+    assert db.store.durable_records > 0   # the slow spills DID land
+    svc.close()
+
+
+def test_crash_between_background_spill_and_manifest_swap(tmp_path):
+    """Kill between the background segment-file write and the manifest
+    swap: the orphan file is ignored, the WAL still covers every block,
+    recovery is bit-exact."""
+    path = os.path.join(str(tmp_path), "idx")
+    db = BitmapDB(_schema(), path=path, spill_records=None, backend="ref")
+    rng = np.random.default_rng(17)
+    blocks = _append_blocks(db, rng, 5, 64)
+    token = db.indexer.prepare_spill()
+    assert token is not None            # segment file written...
+    # ...and the "process dies" here: no commit_spill.
+    keys = jnp.arange(16, dtype=jnp.int32)
+    want = backends.get_backend("ref").create_index(
+        jnp.asarray(np.concatenate(blocks)), keys)
+    db2 = repro.open(path, backend="ref")
+    assert db2.num_records == 5 * 64
+    assert bool(jnp.all(db2.index.packed == want))
+    # the orphan segment is gc fodder in the recovered store
+    st = db2.store.gc()
+    assert token[0].file in st
+
+
+def test_wal_carry_over_append_racing_background_flush(tmp_path):
+    """A block appended BETWEEN prepare_spill and commit_spill lands in
+    the outgoing WAL generation; the commit's rotation must carry it
+    into the fresh generation — crash after the commit, recover, and the
+    racing block must still be there bit-exactly."""
+    path = os.path.join(str(tmp_path), "idx")
+    db = BitmapDB(_schema(), path=path, spill_records=None, backend="ref")
+    rng = np.random.default_rng(19)
+    blocks = _append_blocks(db, rng, 3, 64)
+    si = db.indexer
+    token = si.prepare_spill()
+    racing = _records(rng, 48)          # appended mid-flush
+    db.append_encoded(racing)
+    blocks.append(racing)
+    si.commit_spill(token)              # rotates + carries the racing block
+    # crash NOW: drop the in-memory index entirely, recover from disk
+    keys = jnp.arange(16, dtype=jnp.int32)
+    want = backends.get_backend("ref").create_index(
+        jnp.asarray(np.concatenate(blocks)), keys)
+    db2 = repro.open(path, backend="ref")
+    assert db2.num_records == 3 * 64 + 48
+    assert bool(jnp.all(db2.index.packed == want))
+    # and a recovery of the recovery (the carried WAL must itself be
+    # intact after reopening)
+    db3 = repro.open(path, backend="ref")
+    assert bool(jnp.all(db3.index.packed == want))
+
+
+def test_failed_manifest_commit_then_retry_recovers(tmp_path, monkeypatch):
+    """Phase-C (manifest swap) failure mid-flush: the WAL handle has
+    already switched to the fresh generation.  Post-failure appends,
+    crash recovery, and a same-session retry of the spill must all stay
+    bit-exact (the retry must NOT truncate the generation holding live
+    blocks)."""
+    from repro.store import store as store_mod
+
+    path = os.path.join(str(tmp_path), "idx")
+    db = BitmapDB(_schema(), path=path, spill_records=None, backend="ref")
+    rng = np.random.default_rng(37)
+    blocks = _append_blocks(db, rng, 3, 64)
+    si = db.indexer
+    token = si.prepare_spill()
+    monkeypatch.setattr(store_mod, "commit",
+                        lambda *a, **kw: (_ for _ in ()).throw(
+                            OSError("disk full (simulated)")))
+    with pytest.raises(OSError):
+        si.commit_spill(token)
+    si.abort_spill(token)
+    monkeypatch.undo()
+    racing = _records(rng, 48)          # lands in the switched generation
+    db.append_encoded(racing)
+    blocks.append(racing)
+    keys = jnp.arange(16, dtype=jnp.int32)
+    want = backends.get_backend("ref").create_index(
+        jnp.asarray(np.concatenate(blocks)), keys)
+    # crash now: recovery must see every block exactly once
+    db2 = repro.open(path, backend="ref")
+    assert db2.num_records == 3 * 64 + 48
+    assert bool(jnp.all(db2.index.packed == want))
+    # live-session retry: the flush must skip the truncating rotation
+    db.snapshot()
+    db3 = repro.open(path, backend="ref")
+    assert db3.num_records == 3 * 64 + 48
+    assert bool(jnp.all(db3.index.packed == want))
+
+
+# ---------------------------------------------------------- store satellites
+def test_gc_inflight_guard_and_dry_run(tmp_path):
+    path = os.path.join(str(tmp_path), "idx")
+    db = BitmapDB(_schema(), path=path, spill_records=None, backend="ref")
+    rng = np.random.default_rng(23)
+    _append_blocks(db, rng, 2, 64)
+    token = db.indexer.prepare_spill()
+    store = db.store
+    st = store.gc()                     # concurrent with the in-flight flush
+    assert token[0].file in st.skipped_inflight
+    assert token[0].file not in st
+    db.indexer.commit_spill(token)      # file survives to become live
+    assert any(s.file == token[0].file for s in store.segments)
+    dry = store.gc(dry_run=True)
+    assert dry.dry_run
+    for name in dry:                    # nothing actually deleted
+        assert os.path.exists(os.path.join(path, name))
+    wet = store.gc()
+    assert tuple(wet) == tuple(dry)
+    for name in wet:
+        assert not os.path.exists(os.path.join(path, name))
+    assert wet.bytes_reclaimed == dry.bytes_reclaimed
+
+
+def test_compact_stats_and_dry_run(tmp_path):
+    rng = np.random.default_rng(29)
+    keys = np.arange(8, dtype=np.int32)
+    store = SegmentStore(str(tmp_path), compact_fanout=2,
+                         auto_compact=False)
+    store.ensure_keys(keys)
+    at = 0
+    for _ in range(4):                  # four same-tier segments
+        rec = rng.integers(0, 8, (16, 2), dtype=np.int32)
+        packed = np.asarray(backends.get_backend("ref").create_index(
+            jnp.asarray(rec), jnp.asarray(keys)))
+        store.write_segment(packed, 16, at)
+        at += 16
+    dry = store.compact(dry_run=True)
+    assert dry.dry_run and dry.merges >= 1 and dry.segments_merged >= 2
+    assert len(store.segments) == 4     # dry run touched nothing
+    wet = store.compact()
+    assert wet == dry.merges            # int comparison compatibility
+    assert wet.segments_merged == dry.segments_merged
+    assert wet.bytes_written > 0 and wet.bytes_reclaimed > 0
+    assert len(store.segments) < 4
+    assert store.compact() == 0         # idempotent
+
+
+def test_plan_cache_bounds_and_stats():
+    db = _mk_db(n=256)
+    db._VALUE_CACHE_LIMIT = 8           # instance override for the test
+    rng = np.random.default_rng(31)
+    qs = _mixed_queries(rng, 16, 40)
+    for q in qs:
+        db.query(q)
+    st = db.cache_stats()
+    assert st["value_size"] <= 8
+    assert st["value_evictions"] > 0
+    assert st["misses"] > 0
+    # resubmitting the same OBJECT is an identity hit
+    before = db.cache_stats()["id_hits"]
+    db.query(qs[-1])
+    assert db.cache_stats()["id_hits"] == before + 1
+    # structurally equal fresh object: value hit (if not evicted)
+    db.replan()
+    q = col("a") == 1
+    db.query(q)
+    db.query(col("a") == 1)
+    assert db.cache_stats()["value_hits"] >= 1
+
+
+# ------------------------------------------------------------- data pipeline
+def test_pipeline_prefetch_matches_sync():
+    from repro.data.pipeline import BitmapIndexedDataset, DataConfig
+
+    cfg = DataConfig(vocab_size=64, seq_len=8, docs_per_shard=64,
+                     num_shards=2, num_attributes=32)
+    ds = BitmapIndexedDataset(cfg)
+    w = (col("domain").isin([0, 1])) & ~(col("quality") == 4)
+    try:
+        futs = ds.select_many_async(0, [w, col("lang") == 1])
+        sync = ds.select_many(0, [w, col("lang") == 1])
+        for f, ids in zip(futs, sync):
+            np.testing.assert_array_equal(f.ids, ids)
+        b1 = next(ds.batches(4, where=w, seed=3, prefetch=True))
+        b2 = next(ds.batches(4, where=w, seed=3, prefetch=False))
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                      np.asarray(b2["tokens"]))
+        np.testing.assert_array_equal(np.asarray(b1["labels"]),
+                                      np.asarray(b2["labels"]))
+    finally:
+        ds.close()

@@ -1,5 +1,8 @@
 """Benchmark-regression smoke gate (CI): the engine serving benches must be
-present in BENCH_engine.json and every bit-exactness flag must be true.
+present in BENCH_engine.json and every bit-exactness / perf-gate flag must
+be true — including the backend-sweep gates (bulk-path bandwidth
+utilization >= 50% of measured copy bandwidth, bulk never slower than ref,
+cost-model auto within 5% of the best static backend).
 
 Usage: python benchmarks/check.py [path/to/BENCH_engine.json]
 """
@@ -10,9 +13,10 @@ import sys
 
 REQUIRED = ("engine_planner_query_batched", "engine_streaming_append",
             "store_spill_recover", "db_facade_overhead",
-            "serve_microbatch")
+            "serve_microbatch", "engine_backend_sweep")
 EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact_recover", "bitexact",
-                   "allclose", "facade_overhead_ok", "microbatch_ok")
+                   "allclose", "facade_overhead_ok", "microbatch_ok",
+                   "bulk_bw_ok", "bulk_not_slower_ok", "auto_ok")
 
 
 def main(path: str = "BENCH_engine.json") -> int:

@@ -1,6 +1,9 @@
-"""Roofline analysis from the dry-run artifacts (deliverable g).
+"""Roofline analysis: LM dry-run artifacts + the bitmap-path calibration.
 
-Reads results/dryrun/*.json (written by repro.launch.dryrun) and derives,
+Two independent sections share this CLI:
+
+**LM roofline** (``python benchmarks/roofline.py [out_dir]``) reads
+results/dryrun/*.json (written by repro.launch.dryrun) and derives,
 per (arch x shape x mesh):
 
   compute term    = HLO_FLOPs_corrected / (chips x 197 TFLOP/s)
@@ -16,24 +19,38 @@ Corrections (documented, since XLA cost_analysis counts loop bodies once):
 
 All HLO quantities are PER-DEVICE (the partitioned module); MODEL_FLOPS is
 global and the ratio uses HLO x num_devices.
+
+**Bitmap roofline** (``python benchmarks/roofline.py bitmap [path]``)
+measures the packed-bitmap query path on THIS host — STREAM-class copy
+bandwidth plus per-backend sustained words/sec and dispatch overhead — and
+persists the calibration JSON the cost model (`repro.engine.costmodel`)
+loads to make ``auto`` a measured choice.  :func:`bitmap_roofline` is the
+importable entry point.
+
+Nothing LM-related imports at module load: the heavy ``repro.configs`` /
+model imports happen inside the LM functions, so importing this module (or
+running the bitmap section) never drags in the LM stack.
 """
 from __future__ import annotations
 
 import glob
 import json
-import math
 import os
 import sys
-
-sys.path.insert(0, "src")
-
-from repro.configs import get_config  # noqa: E402
-from repro.launch.shapes import SHAPES  # noqa: E402
-from repro.models.model import global_flags  # noqa: E402
 
 PEAK_FLOPS = 197e12          # bf16 per chip (TPU v5e)
 HBM_BW = 819e9               # B/s per chip
 LINK_BW = 50e9               # B/s per ICI link
+
+
+def _ensure_src() -> None:
+    """Make ``repro`` importable when run from the repo root as a script
+    (no-op when the package is already on the path)."""
+    try:
+        import repro  # noqa: F401
+    except ImportError:
+        sys.path.insert(0, os.path.join(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), "src"))
 
 Q_CHUNK, KV_CHUNK = 512, 1024
 
@@ -116,9 +133,19 @@ def _corrected_coll(cell: dict, L: int) -> float | None:
     return l0 + L * (full - l0)
 
 
+def _lm_imports():
+    """The LM-stack imports, deferred to first use (see module docstring)."""
+    _ensure_src()
+    from repro.configs import get_config
+    from repro.launch.shapes import SHAPES
+    from repro.models.model import global_flags  # noqa: F401  (flag defs)
+    return get_config, SHAPES
+
+
 def analyze(cell: dict) -> dict | None:
     if cell.get("status") != "ok":
         return None
+    get_config, SHAPES = _lm_imports()
     cfg = get_config(cell["arch"])
     shape = SHAPES[cell["shape"]]
     nd = cell.get("num_devices", 256)
@@ -214,5 +241,59 @@ def main(out_dir: str = "results/dryrun") -> list[dict]:
     return rows
 
 
+# --------------------------------------------------------------- bitmap
+def bitmap_roofline(path: str | None = None, *, num_records: int = 1 << 20,
+                    num_keys: int = 256, save: bool = True) -> dict:
+    """Measure the bitmap query path's roofline on this host and (by
+    default) persist the calibration JSON the cost model loads.
+
+    Returns a plain dict: the measured copy bandwidth, per-backend
+    words/sec + dispatch overhead + bandwidth utilization (streamed bytes
+    over copy bytes/sec), and where the calibration was written.
+    Importable — ``repro.engine.costmodel`` does the measuring; this
+    wrapper only formats and persists.
+    """
+    _ensure_src()
+    from repro.engine import costmodel
+
+    cal = costmodel.measure_calibration(num_records=num_records,
+                                        num_keys=num_keys)
+    out = {
+        "platform": cal.platform,
+        "copy_bytes_per_sec": cal.copy_bytes_per_sec,
+        "backends": {
+            n: {
+                "words_per_sec": p.words_per_sec,
+                "dispatch_overhead_s": p.dispatch_overhead_s,
+                "bandwidth_utilization":
+                    p.words_per_sec * 4.0 / cal.copy_bytes_per_sec,
+            } for n, p in cal.profiles
+        },
+    }
+    if save:
+        where = costmodel.save_calibration(cal, path)
+        costmodel.set_calibration(cal)
+        out["calibration_path"] = where
+    return out
+
+
+def bitmap_main(path: str | None = None) -> dict:
+    r = bitmap_roofline(path)
+    print(f"platform: {r['platform']}")
+    print(f"copy bandwidth: {r['copy_bytes_per_sec'] / 1e9:.2f} GB/s")
+    print(f"{'backend':10s} {'words/s':>12s} {'overhead us':>12s} "
+          f"{'bw util':>8s}")
+    for n, p in sorted(r["backends"].items()):
+        print(f"{n:10s} {p['words_per_sec']:12.3e} "
+              f"{p['dispatch_overhead_s'] * 1e6:12.1f} "
+              f"{100 * p['bandwidth_utilization']:7.1f}%")
+    if "calibration_path" in r:
+        print(f"calibration written to {r['calibration_path']}")
+    return r
+
+
 if __name__ == "__main__":
-    main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")
+    if len(sys.argv) > 1 and sys.argv[1] == "bitmap":
+        bitmap_main(sys.argv[2] if len(sys.argv) > 2 else None)
+    else:
+        main(sys.argv[1] if len(sys.argv) > 1 else "results/dryrun")

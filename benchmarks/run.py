@@ -41,6 +41,14 @@ gate on the bit-exactness flags (see benchmarks/check.py).
                              p50/p99 latency, queries/sec, coalesced batch
                              sizes, and the active-vs-standby energy split;
                              CI gates >= 3x throughput and bit-exactness
+  engine_backend_sweep     — per-backend (ref / bulk / pallas-on-TPU)
+                             streamed words/sec on a 1M-record mixed wave,
+                             bulk-path bandwidth utilization vs measured
+                             copy bandwidth, and the cost-model auto
+                             choice vs the best static backend; persists
+                             the calibration JSON the cost model loads;
+                             CI gates bulk utilization >= 50%, bulk not
+                             slower than ref, auto within 5% of best
   kernel_*            — Pallas kernels (interpret mode) vs oracle timings
   elastic_energy      — multi-core elastic standby-power policy (Fig. 4)
   tpu_projection      — v5e roofline projection of indexing throughput
@@ -558,6 +566,128 @@ def serve_microbatch():
         f"microbatch_ok={gate} bitexact={ok}")
 
 
+def engine_backend_sweep():
+    """The bulk-bitwise backend sweep at bandwidth-bound size: 64 mixed
+    plans over a 256-key x 1M-record index, per candidate backend, with
+    the measured numbers persisted as the cost model's calibration (the
+    CI artifact) and then ``auto`` timed against the best static choice.
+
+    Derived figures: per-backend streamed words/sec, the bulk path's
+    bandwidth utilization vs a STREAM-class copy measured with the same
+    machinery (gated >= 50% in check.py), bulk never slower than ref
+    (within a 15% noise band), and auto within 5% of the best static
+    backend — the cost model reuses the exact jit-cached executor the
+    static run compiled, so only the decision overhead separates them."""
+    from repro.engine import costmodel
+
+    n, m, nq = 1 << 20, 256, 64
+    nw = n // 32
+    rng = np.random.default_rng(31)
+    bi = jnp.asarray(rng.integers(0, 2 ** 32, (m, nw), dtype=np.uint32))
+    plans = [planner.plan(p) for p in _mixed_predicates(m, nq, 32)]
+    tiny = jnp.asarray(rng.integers(0, 2 ** 32, (m, 16), dtype=np.uint32))
+
+    # Interleaved reps: one round-robin over every candidate per rep, so
+    # machine-load drift between phases (the killer on shared single-core
+    # runners) hits all candidates equally instead of whichever was timed
+    # last.  Returns ALL rep times: throughput figures take the per-name
+    # min, while the perf gates compare candidates via the per-rep PAIRED
+    # ratio (adjacent calls in one rep share machine state, so its min
+    # over reps cancels the rep-scale drift that per-name mins cannot).
+    def interleaved(fns: dict, reps: int = 7, warmup: int = 2) -> dict:
+        for fn in fns.values():
+            for _ in range(warmup):
+                jax.block_until_ready(fn())
+        times = {k: [] for k in fns}
+        for _ in range(reps):
+            for k, fn in fns.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(fn())
+                times[k].append(time.perf_counter() - t0)
+        return times                         # seconds per label, per rep
+
+    def paired_ratio(times: dict, name: str, others: tuple) -> float:
+        """Min over reps of name's time vs the best other IN THE SAME
+        rep — the drift-cancelling "never slower" statistic."""
+        return min(ts / min(times[o][i] for o in others)
+                   for i, ts in enumerate(times[name]))
+
+    copy = jax.jit(lambda a: a | jnp.uint32(0))
+
+    def run(name):
+        return engine_batch.execute_many(bi, plans, num_records=n,
+                                         backend=name)
+
+    # streamed words of this wave (padded bucket shapes x index words)
+    shapes, _, _ = costmodel._bucket_shapes(plans)
+    words = costmodel._streamed_words(shapes, nw)
+
+    names = costmodel.candidates()
+    stage1 = {name: (lambda name=name: run(name)) for name in names}
+    stage1["copy"] = lambda: copy(bi)
+    t_static = interleaved(stage1)
+    copy_bps = 2.0 * bi.nbytes / min(t_static.pop("copy"))
+    outs = {name: run(name) for name in names}
+    ok = all(bool(jnp.all(outs[name][0] == outs["ref"][0]))
+             and bool(jnp.all(outs[name][1] == outs["ref"][1]))
+             for name in names)
+
+    profiles = []
+    for name in names:
+        t_tiny = interleaved({name: lambda name=name:
+                              engine_batch.execute_many(
+                                  tiny, plans[:1], num_records=512,
+                                  backend=name)}, reps=3, warmup=1)[name]
+        profiles.append((name, costmodel.BackendProfile(
+            words / min(t_static[name]), max(min(t_tiny), 1e-7))))
+
+    # the sweep IS the calibration measurement: persist it so the cost
+    # model's auto choice provably tracks what this host just measured
+    cal = costmodel.Calibration(tuple(sorted(profiles)), copy_bps,
+                                jax.default_backend(), "measured")
+    cal_path = costmodel.save_calibration(cal)
+    costmodel.set_calibration(cal)
+
+    # auto vs the statics, same interleaved protocol — auto reuses the
+    # winner's jit-cached executor, so only decision overhead separates
+    stage2 = {name: (lambda name=name: run(name)) for name in names}
+    stage2["auto"] = lambda: run("auto")
+    t2 = interleaved(stage2)
+    ra, ca = run("auto")
+    ok = ok and bool(jnp.all(ra == outs["ref"][0])) \
+        and bool(jnp.all(ca == outs["ref"][1]))
+
+    chosen = costmodel.decide(plans, num_words=nw, num_keys=m).backend
+    # per-name best across BOTH interleaved stages (14 samples each):
+    # drift only ever inflates a sample, so the combined min is the
+    # fairest per-backend throughput figure
+    t_best = {name: min(t_static[name] + t2[name]) for name in names}
+    us_auto = min(t2["auto"]) * 1e6
+    util = (words / t_best["bulk"]) * 4.0 / copy_bps
+    bulk_bw_ok = util >= 0.5
+    # "never slower" gates use the PAIRED per-rep ratio: bulk vs ref in
+    # the same round-robin rep (both stages contribute reps), and auto —
+    # measured only in stage 2 — vs the stage-2 statics.  Auto reuses the
+    # chosen backend's jit-cached executor, so only the (memoized)
+    # decision overhead separates them; the 5% margin absorbs what per-
+    # rep pairing cannot cancel on a shared single-core runner.
+    both = {name: t_static[name] + t2[name] for name in names}
+    bulk_vs_ref = paired_ratio(both, "bulk", ("ref",))
+    bulk_not_slower_ok = bulk_vs_ref <= 1.15
+    auto_ratio = paired_ratio(t2, "auto", tuple(names))
+    auto_ok = auto_ratio <= 1.05 or paired_ratio(t2, "auto",
+                                                 (chosen,)) <= 1.03
+    wps = " ".join(f"{name}_Mwords/s={words / t_best[name] / 1e6:.0f}"
+                   for name in names)
+    row("engine_backend_sweep", us_auto,
+        f"{wps} copy_GB/s={copy_bps / 1e9:.2f} "
+        f"bulk_bw_util={util:.2f} bulk_vs_ref={bulk_vs_ref:.3f}x "
+        f"auto_vs_best={auto_ratio:.3f}x queries={nq} records={n} "
+        f"calibration={cal_path} bulk_bw_ok={bulk_bw_ok} "
+        f"bulk_not_slower_ok={bulk_not_slower_ok} auto_ok={auto_ok} "
+        f"bitexact={ok}")
+
+
 # ------------------------------------------------------ kernel microbenches
 def kernel_cam_match():
     rng = np.random.default_rng(2)
@@ -620,6 +750,7 @@ ALL = [fig6_freq_power, fig7_energy, fig8_leakage, table1_spb,
        bic_create_cpu, bic_query_cpu, engine_planner_query,
        engine_planner_query_batched, engine_streaming_append,
        store_spill_recover, db_facade_overhead, serve_microbatch,
+       engine_backend_sweep,
        kernel_cam_match, kernel_bit_transpose, kernel_bitmap_query,
        elastic_energy, tpu_projection]
 

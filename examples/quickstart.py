@@ -80,6 +80,20 @@ def main():
     labels = [schema.key_label(i) for i in range(3)]
     print(f"per-key selectivity stats: {labels} -> {st.counts[:3]}")
 
+    # ---- explain: how a query WOULD run, without running it ------------
+    # The session serves with backend="auto": a measured cost model picks
+    # the cheapest execution backend per dispatch (the fused bulk-bitwise
+    # sweep vs the per-pass paths) from a persisted calibration of this
+    # host.  explain() surfaces that decision: the lowered pass program,
+    # its padded bucket shape, the selectivity estimate, and the
+    # per-candidate time estimates behind the backend choice.
+    ex = db.explain(q)
+    est = {k: f"{v * 1e6:.0f}us" for k, v in ex["decision"]["estimates"]
+           .items()} if ex["decision"] else {}
+    print(f"explain: bucket_shape={ex['bucket_shape']} "
+          f"backend={ex['backend']} est_matches={ex['est_matches']:.0f} "
+          f"(actual {res.count}) candidates={est}")
+
     # ---- durability: spill to a store, crash, recover ------------------
     with tempfile.TemporaryDirectory() as root:
         path = os.path.join(root, "idx")

@@ -44,7 +44,8 @@ import numpy as np
 from repro.db import expr as expr_mod
 from repro.db.result import LazyBatch, Result, ResultBatch
 from repro.db.schema import Schema
-from repro.engine import backends, batch as engine_batch, planner, policy
+from repro.engine import (backends, batch as engine_batch, costmodel,
+                          planner, policy)
 from repro.engine.runtime import StreamingIndexer
 
 SCHEMA_FILE = "SCHEMA.json"
@@ -88,7 +89,12 @@ class BitmapDB:
             raise ValueError(f"num_keys={num_keys} contradicts the schema "
                              f"({schema.num_keys} keys)")
         self.schema = schema
-        self.backend = backends.resolve_backend(backend)
+        # "auto" stays UNRESOLVED: the query path hands it to the engine,
+        # where the measured cost model picks per wave.  Index creation is
+        # one fixed bulk pass, so that side pins a concrete backend now.
+        self.backend = ("auto" if backend == "auto"
+                        else backends.resolve_backend(backend))
+        self._create_backend = backends.resolve_backend(backend)
         self.path = path
         m = schema.num_keys if schema is not None else int(num_keys)
         self._keys = jnp.arange(m, dtype=jnp.int32)
@@ -101,7 +107,8 @@ class BitmapDB:
         self._stats_cache: tuple[int, planner.KeyStats] | None = None
         self._view_cache = None            # (buf, n, BitmapIndex) snapshot
         if path is None:
-            self._si = StreamingIndexer(self._keys, backend=self.backend,
+            self._si = StreamingIndexer(self._keys,
+                                        backend=self._create_backend,
                                         capacity_words=capacity_words)
             return
         from repro.store import SegmentStore
@@ -109,11 +116,12 @@ class BitmapDB:
         self._persist_schema(path)
         if _restore:
             self._si = StreamingIndexer.restore(
-                store, self._keys, backend=self.backend,
+                store, self._keys, backend=self._create_backend,
                 capacity_words=capacity_words, flush_records=spill_records)
             self._counts = _popcounts(self._si.index.packed)
             return
-        self._si = StreamingIndexer(self._keys, backend=self.backend,
+        self._si = StreamingIndexer(self._keys,
+                                    backend=self._create_backend,
                                     capacity_words=capacity_words)
         try:
             self._si.attach_store(store, flush_records=spill_records)
@@ -246,7 +254,7 @@ class BitmapDB:
             raise ValueError(f"records must be (N, W), got "
                              f"{records.shape}")
         if records.shape[0]:
-            block = backends.get_backend(self.backend).create_index(
+            block = backends.get_backend(self._create_backend).create_index(
                 records, self._keys)
             self._si.append_indexed(records, block)
             self._counts += _popcounts(block)
@@ -340,12 +348,15 @@ class BitmapDB:
 
     def _execute(self, plans: Sequence, view,
                  pad_output: bool = False) -> tuple:
+        # live sessions hand their exact per-key stats to the cost model
+        # (read-only wrappers only once the caller has paid for .stats)
+        stats = self.stats if self._counts is not None else None
         if hasattr(view, "parts"):              # StoredIndex
             return engine_batch.execute_many_segments(
-                view.parts, plans, backend=self.backend)
+                view.parts, plans, backend=self.backend, stats=stats)
         return engine_batch.execute_many(
             view.packed, plans, num_records=view.num_records,
-            backend=self.backend, pad_output=pad_output)
+            backend=self.backend, pad_output=pad_output, stats=stats)
 
     def _view(self):
         """Immutable snapshot the lazy batch executes against — a query
@@ -367,6 +378,69 @@ class BitmapDB:
     def query(self, q) -> Result:
         """One expression / predicate / plan -> a lazy :class:`Result`."""
         return self.query_many([q])[0]
+
+    def explain(self, q) -> dict:
+        """How this session would run ``q`` — without running it.
+
+        Returns a plain dict: the cached plan object (``plan``), its
+        lowered pass ``program`` and canonical padded ``bucket_shape``
+        (None for composite fallbacks / contradictions), the KeyStats
+        selectivity estimate (``est_matches`` / ``est_selectivity``, None
+        without stats), the ``backend`` a dispatch would land on right
+        now, and — when the session runs ``auto`` — the full cost-model
+        ``decision``: per-candidate time ``estimates``, the chosen
+        factoring/stacking, and the model's input ``terms``.  Purely
+        observational: no device work, no cache perturbation beyond plan
+        lowering.
+        """
+        pl = self._plan_for(q)
+        view = self._view()
+        if hasattr(view, "parts"):              # StoredIndex
+            segments = len(view.parts)
+            num_words = max((p.shape[1] for p, _ in view.parts), default=0)
+        else:
+            segments = 1
+            num_words = view.packed.shape[1]
+        stats = self.stats if self._counts is not None else None
+        out: dict = {
+            "plan": pl,
+            "program": None,
+            "bucket_shape": None,
+            "num_records": self.num_records,
+            "num_words": num_words,
+            "segments": segments,
+            "est_matches": None,
+            "est_selectivity": None,
+        }
+        if isinstance(pl, planner.CompositePlan):
+            out["fallback"] = "composite"       # served via planner.execute
+        else:
+            prog, shape, _, _ = engine_batch._lowered(pl)
+            out["program"] = prog
+            out["bucket_shape"] = shape
+            if shape is None:
+                out["fallback"] = "contradiction"   # constant all-zeros
+        em = costmodel.estimate_matches([pl], stats)
+        if em is not None:
+            out["est_matches"] = em
+            out["est_selectivity"] = (em / self.num_records
+                                      if self.num_records else 0.0)
+        if self.backend == "auto":
+            decision = costmodel.decide(
+                [pl], num_words=num_words, num_segments=segments,
+                num_keys=self.num_keys, stats=stats)
+            out["backend"] = decision.backend
+            out["decision"] = {
+                "backend": decision.backend,
+                "factor": decision.factor,
+                "stack_uniform": decision.stack_uniform,
+                "estimates": dict(decision.estimates),
+                "terms": dict(decision.terms),
+            }
+        else:
+            out["backend"] = self.backend
+            out["decision"] = None
+        return out
 
     def query_many(self, queries: Sequence, *,
                    pad_output: bool = False) -> ResultBatch:

@@ -14,6 +14,12 @@ Three tiers (see ARCHITECTURE.md):
   * :mod:`repro.engine.batch`    — batched query serving: many predicate
     trees per dispatch via plan-shape bucketing, identity-row padding, and
     vmapped jit-cached bucket executors.
+  * :mod:`repro.engine.bulk`     — the ``bulk`` backend's execution core:
+    whole pass programs as fused multi-word sweeps (pure-jnp fallback on
+    CPU, word-tiled Pallas kernel on TPU).
+  * :mod:`repro.engine.costmodel` — measured roofline cost model behind
+    ``backend="auto"``: persisted per-backend calibration plus a per-wave
+    decision (backend, factoring, segment stacking).
   * :mod:`repro.engine.runtime`  — streaming multi-core runtime: incremental
     index append (jitted shift/carry splice, scanned batch appends) and
     shard_map dispatch fused with elastic energy accounting.
@@ -44,6 +50,11 @@ _EXPORTS = {
     "from_include_exclude": "planner", "KeyStats": "planner",
     # batch
     "execute_many": "batch", "execute_many_segments": "batch",
+    # costmodel
+    "decide": "costmodel", "Decision": "costmodel",
+    "Calibration": "costmodel", "BackendProfile": "costmodel",
+    "get_calibration": "costmodel", "set_calibration": "costmodel",
+    "measure_calibration": "costmodel",
     # runtime
     "StreamingIndexer": "runtime", "MulticoreRuntime": "runtime",
     "multicore_create_index": "runtime", "append_packed": "runtime",
@@ -51,11 +62,12 @@ _EXPORTS = {
 }
 
 __all__ = sorted(_EXPORTS) + ["policy", "backends", "planner", "batch",
-                              "runtime"]
+                              "bulk", "costmodel", "runtime"]
 
 
 def __getattr__(name):
-    if name in ("policy", "backends", "planner", "batch", "runtime"):
+    if name in ("policy", "backends", "planner", "batch", "bulk",
+                "costmodel", "runtime"):
         return importlib.import_module(f"{__name__}.{name}")
     mod = _EXPORTS.get(name)
     if mod is None:

@@ -12,11 +12,23 @@ A :class:`Backend` pairs the two primitive operations the engine needs:
       planner applies :func:`repro.engine.policy.mask_tail` exactly once per
       compiled plan.
 
-Built-ins: ``pallas`` (the TPU kernels; interpret mode off-TPU) and ``ref``
-(the pure-jnp oracle).  ``auto`` resolves to ``pallas`` on TPU and ``ref``
-elsewhere — vmapping interpreted Pallas kernels on CPU is strictly slower
-than the oracle.  New backends (e.g. a future GPU or bit-sliced CPU path)
-register with :func:`register_backend`.
+A backend may additionally provide ``run_program`` — a whole-bucket
+executor with the batched layer's call contract (augmented index, record
+count, ``(Q, G, P, L)`` selector arrays, post xor masks -> rows + counts).
+When present, :mod:`repro.engine.batch` jits IT as the bucket executor
+instead of composing per-pass ``query`` calls — the hook a bulk-bitwise
+path needs to fuse a whole pass program into one multi-word sweep.
+
+Built-ins: ``pallas`` (the TPU kernels; interpret mode off-TPU), ``ref``
+(the pure-jnp oracle) and ``bulk`` (the tiled bulk-bitwise sweep of
+:mod:`repro.engine.bulk` — Pallas word-tiled kernel on TPU, pure-jnp tile
+sweep elsewhere).  ``auto`` without workload information resolves to
+``pallas`` on TPU and ``ref`` elsewhere — vmapping interpreted Pallas
+kernels on CPU is strictly slower than the oracle; the workload-aware
+call sites (``planner.execute``, ``engine.batch``, ``repro.db``) instead
+route ``auto`` through the measured cost model
+(:mod:`repro.engine.costmodel`).  New backends (e.g. a future GPU or
+bit-sliced CPU path) register with :func:`register_backend`.
 """
 from __future__ import annotations
 
@@ -26,7 +38,7 @@ from typing import Protocol
 
 import jax
 
-from repro.engine import policy
+from repro.engine import bulk, policy
 from repro.kernels import ops, ref
 
 
@@ -39,22 +51,32 @@ class _QueryFn(Protocol):
                  ) -> tuple[jax.Array, jax.Array]: ...
 
 
+class _ProgramFn(Protocol):
+    def __call__(self, aug: jax.Array, num_records, sels: jax.Array,
+                 invs: jax.Array, post: jax.Array
+                 ) -> tuple[jax.Array, jax.Array]: ...
+
+
 @dataclasses.dataclass(frozen=True)
 class Backend:
     name: str
     create_index: _CreateFn
     query: _QueryFn
+    #: optional whole-bucket executor (see module docstring); backends
+    #: without one get the per-pass bucket body composed around ``query``
+    run_program: _ProgramFn | None = None
 
 
 _REGISTRY: dict[str, Backend] = {}
 
 
-# Compiled executors (sequential, factored, batched, vmapped-create) close
-# over Backend objects; re-registering a name must drop them so stale
-# backends never keep serving.  getattr-guarded: a module may be mid-import.
+# Compiled executors (sequential, factored, batched, stacked, vmapped-
+# create) close over Backend objects; re-registering a name must drop them
+# so stale backends never keep serving.  getattr-guarded: a module may be
+# mid-import.
 _COMPILED_CACHES = (
     ("repro.engine.planner", ("_compiled", "_compiled_factored")),
-    ("repro.engine.batch", ("_executor",)),
+    ("repro.engine.batch", ("_executor", "_stacked_executor")),
     ("repro.engine.runtime", ("_vmapped_create",)),
 )
 
@@ -101,3 +123,5 @@ def _ref_create_index(records: jax.Array, keys: jax.Array) -> jax.Array:
 
 register_backend(Backend("ref", _ref_create_index, ref.bitmap_query))
 register_backend(Backend("pallas", ops.create_index, ops.query))
+register_backend(Backend("bulk", bulk.create_index, bulk.query,
+                         run_program=bulk.run_program))

@@ -49,7 +49,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.engine import backends, planner, policy
+from repro.engine import backends, costmodel, planner, policy
 
 #: One pass: (literals tuple[(key, inverted)], post_invert).  Program:
 #: tuple of groups, each a tuple of passes.
@@ -116,10 +116,23 @@ def _bucket_body(backend, p: int, g: int):
     return run
 
 
+def _body_for(backend, g: int, p: int):
+    """A backend's bucket executor body: its whole-bucket ``run_program``
+    hook when it has one (the bulk backend's fused multi-word sweep),
+    else the per-pass body composed around ``query``.  Both honor the
+    same call contract, so the jitted/stacked wrappers don't care."""
+    if backend.run_program is not None:
+        return backend.run_program
+    return _bucket_body(backend, p, g)
+
+
 @functools.lru_cache(maxsize=64)
 def _executor(backend_name: str, g: int, p: int, l: int):
-    """One jitted batched executor per (backend, canonical shape)."""
-    return jax.jit(_bucket_body(backends.get_backend(backend_name), p, g))
+    """One jitted batched executor per (backend, canonical shape).
+    Keyed by backend NAME: executors for different backends coexist in
+    the cache, so a cost-model backend switch mid-traffic lands on an
+    already-compiled executor instead of stalling a wave."""
+    return jax.jit(_body_for(backends.get_backend(backend_name), g, p))
 
 
 @functools.lru_cache(maxsize=64)
@@ -129,7 +142,7 @@ def _stacked_executor(backend_name: str, g: int, p: int, l: int):
     ``num_records`` (S,), with the selector arrays broadcast — every live
     segment of a uniform-word-count chain serves the whole bucket in ONE
     dispatch instead of one dispatch per segment."""
-    body = _bucket_body(backends.get_backend(backend_name), p, g)
+    body = _body_for(backends.get_backend(backend_name), g, p)
     return jax.jit(jax.vmap(body, in_axes=(0, 0, None, None, None)))
 
 
@@ -235,6 +248,29 @@ def _partition(plans: Sequence, m: int):
     return packed_buckets, zeros, composite
 
 
+#: id(packed) -> (packed, augmented) — a steady-state serving loop
+#: re-dispatches against the SAME immutable packed buffer every wave, and
+#: re-materializing the augmented copy (one identity row appended) costs a
+#: full index copy per dispatch at bandwidth-bound sizes.  Entries hold a
+#: strong reference to the source buffer, so a cached id can never belong
+#: to a recycled object; bounded by wholesale drop.
+_AUG_CACHE: dict = {}
+_AUG_CACHE_LIMIT = 16
+
+
+def _augmented(packed: jax.Array) -> jax.Array:
+    ent = _AUG_CACHE.get(id(packed))
+    if ent is not None and ent[0] is packed:
+        return ent[1]
+    m, nw = packed.shape
+    aug = jnp.concatenate(
+        [packed, jnp.full((1, nw), 0xFFFFFFFF, dtype=jnp.uint32)], axis=0)
+    if len(_AUG_CACHE) >= _AUG_CACHE_LIMIT:
+        _AUG_CACHE.clear()
+    _AUG_CACHE[id(packed)] = (packed, aug)
+    return aug
+
+
 def _serve(packed: jax.Array, num_records: int, plans: Sequence,
            part, name: str, pad_output: bool = False
            ) -> tuple[jax.Array, jax.Array]:
@@ -260,8 +296,7 @@ def _serve(packed: jax.Array, num_records: int, plans: Sequence,
     pos: list[int] = []         # its row in the concatenated pieces
     off = 0
     if buckets:
-        aug = jnp.concatenate(
-            [packed, jnp.full((1, nw), 0xFFFFFFFF, dtype=jnp.uint32)], axis=0)
+        aug = _augmented(packed)
         nrec = jnp.int32(num_records)
         for shape, idxs, sels, invs, post in buckets:
             rws, cts = _executor(name, *shape)(aug, nrec, sels, invs, post)
@@ -305,7 +340,8 @@ def execute_many(packed: jax.Array,
                                             planner.CompositePlan]], *,
                  num_records: int, backend: str = "auto",
                  max_clauses: int | None = planner.DEFAULT_MAX_CLAUSES,
-                 factor: bool = False, pad_output: bool = False
+                 factor: bool = False, pad_output: bool = False,
+                 stats: planner.KeyStats | None = None
                  ) -> tuple[jax.Array, jax.Array]:
     """Serve a batch of predicate trees (or pre-built plans) over one packed
     (M, Nw) index in a handful of vmapped dispatches.
@@ -317,12 +353,27 @@ def execute_many(packed: jax.Array,
     ``pad_output=True`` pads the query axis of BOTH outputs to
     ``pow2_ceil(Q)`` (rows past Q are unspecified) so varying serving
     batch sizes reuse compiled re-assembly shapes — see :func:`_serve`.
+
+    ``backend="auto"`` is a *measured* per-wave choice: the lowered plans'
+    padded bucket shapes feed :func:`repro.engine.costmodel.decide`, which
+    picks the cheapest calibrated backend (and whether common-clause
+    factoring shrinks the streamed words).  ``stats`` (optional KeyStats)
+    only refines the cost terms — never the result bits.
     """
-    name = backends.resolve_backend(backend)
     m, nw = packed.shape
     plans = _to_plans(predicates, m, max_clauses, factor)
     if not plans:
         return (jnp.zeros((0, nw), jnp.uint32), jnp.zeros((0,), jnp.int32))
+    if backend == "auto":
+        decision = costmodel.decide(plans, num_words=nw, num_keys=m,
+                                    stats=stats, allow_factor=not factor)
+        name = decision.backend
+        if decision.factor:
+            plans = [planner.factor(pl)
+                     if isinstance(pl, planner.QueryPlan) and pl.clauses
+                     else pl for pl in plans]
+    else:
+        name = backends.resolve_backend(backend)
     return _serve(packed, num_records, plans, _partition(plans, m), name,
                   pad_output)
 
@@ -386,7 +437,9 @@ def execute_many_segments(parts: Sequence[tuple[jax.Array, int]],
                           predicates: Sequence, *, backend: str = "auto",
                           max_clauses: int | None =
                           planner.DEFAULT_MAX_CLAUSES,
-                          factor: bool = False, stack_uniform: bool = True
+                          factor: bool = False,
+                          stack_uniform: bool | None = None,
+                          stats: planner.KeyStats | None = None
                           ) -> tuple[jax.Array, jax.Array]:
     """Serve a query batch over an index stored as a chain of packed
     segments covering contiguous record ranges — the durable layout of
@@ -401,14 +454,15 @@ def execute_many_segments(parts: Sequence[tuple[jax.Array, int]],
     offset.  Counts sum per segment.  Bit-identical to
     :func:`execute_many` over the spliced-together index.
 
-    ``stack_uniform`` (default on): when every live segment shares ONE
-    word count — the steady state of a tier-compacted store — the
-    segments stack into an (S, M, Nw) array and each bucket serves ALL
-    segments in a single vmapped dispatch (:func:`_stacked_executor`)
-    instead of one bucketed dispatch per segment; results stay
-    bit-identical to the per-segment path.
+    ``stack_uniform``: when every live segment shares ONE word count —
+    the steady state of a tier-compacted store — the segments stack into
+    an (S, M, Nw) array and each bucket serves ALL segments in a single
+    vmapped dispatch (:func:`_stacked_executor`) instead of one bucketed
+    dispatch per segment; results stay bit-identical to the per-segment
+    path.  ``None`` (the default) means: stack for explicit backends,
+    and for ``backend="auto"`` let the cost model weigh the stack-copy
+    bytes against the saved per-segment dispatch overheads.
     """
-    name = backends.resolve_backend(backend)
     parts = [(p, int(n)) for p, n in parts]
     if not parts:
         # an empty index has no key count to validate against; every
@@ -425,8 +479,23 @@ def execute_many_segments(parts: Sequence[tuple[jax.Array, int]],
     q = len(plans)
     if q == 0:
         return (jnp.zeros((q, tw), jnp.uint32), jnp.zeros((q,), jnp.int32))
-    part = _partition(plans, m)
     max_bw = max(p.shape[1] for p, _ in parts)
+    if backend == "auto":
+        decision = costmodel.decide(plans, num_words=max_bw,
+                                    num_segments=len(parts), num_keys=m,
+                                    stats=stats, allow_factor=not factor)
+        name = decision.backend
+        if decision.factor:
+            plans = [planner.factor(pl)
+                     if isinstance(pl, planner.QueryPlan) and pl.clauses
+                     else pl for pl in plans]
+        if stack_uniform is None:
+            stack_uniform = decision.stack_uniform
+    else:
+        name = backends.resolve_backend(backend)
+        if stack_uniform is None:
+            stack_uniform = True
+    part = _partition(plans, m)
     rows = jnp.zeros((q, tw + max_bw + 1), jnp.uint32)
     counts = jnp.zeros((q,), jnp.int32)
     uniform = len({p.shape[1] for p, _ in parts}) == 1

@@ -468,6 +468,10 @@ def execute(packed: jax.Array, predicate: Union[Pred, AnyPlan], *,
 
     Returns (packed result row (Nw,) uint32, matching-record count), with
     tail bits past ``num_records`` masked to zero.
+
+    ``backend="auto"`` routes through the measured cost model
+    (:mod:`repro.engine.costmodel`) — a per-call choice of the cheapest
+    calibrated backend for this plan shape and word count.
     """
     if isinstance(predicate, (QueryPlan, FactoredPlan, CompositePlan)):
         pl = predicate
@@ -477,7 +481,13 @@ def execute(packed: jax.Array, predicate: Union[Pred, AnyPlan], *,
         # inside a contradictory/absorbed branch still raises
         mentioned = key_indices(predicate)
         pl = plan(predicate)
-    name = backends.resolve_backend(backend)
+    if backend == "auto":
+        from repro.engine import costmodel  # deferred: costmodel imports us
+        name = costmodel.decide([pl], num_words=packed.shape[1],
+                                num_keys=packed.shape[0],
+                                allow_factor=False).backend
+    else:
+        name = backends.resolve_backend(backend)
     check_key_range(mentioned, packed.shape[0])
     return _run(packed, pl, num_records, name)
 

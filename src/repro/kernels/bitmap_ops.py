@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: fused bitmap query execution.
+"""Pallas TPU kernels: fused bitmap query execution.
 
 The point of a bitmap index is that a multi-dimensional query like
 "A2 AND A4 AND (NOT A5)" is a streaming pass over K packed index rows.
@@ -9,6 +9,13 @@ popcount (selectivity) in a single pass — the TPU analogue of the ASIC
 streaming the BI rows through a logic tree.
 
 rows (K, Nw) uint32, invert (K,) int32 -> (result (Nw,), count ()).
+
+:func:`bulk_program` extends the same idea to a whole bucket of lowered
+pass programs (the bulk backend's TPU path, see :mod:`repro.engine.bulk`):
+the grid walks word tiles of the augmented index; per tile, every literal
+of every query gathers from the VMEM-resident tile and the full
+AND-over-literals / xor / AND-over-passes / OR-over-groups tree folds
+before one write of the tile's result words.
 """
 from __future__ import annotations
 
@@ -76,3 +83,60 @@ def bitmap_query(rows: jax.Array, invert: jax.Array, *,
         interpret=interpret,
     )(invert.astype(jnp.int32), rows.astype(_U32))
     return result, count[0]
+
+
+def _bulk_kernel(sels_ref, invs_ref, post_ref, aug_ref, out_ref):
+    blk = aug_ref[...]                        # (M+1, BN) — the resident tile
+    sels = sels_ref[...]                      # (Q, G, P, L) int32
+    invs = invs_ref[...]                      # (Q, G, P, L) int32
+    post = post_ref[...]                      # (Q, G, P) uint32 xor masks
+    q, g, p, l = sels.shape
+    flip = invs.astype(_U32) * _U32(0xFFFFFFFF)
+    acc = jnp.full((q, g, p, blk.shape[1]), 0xFFFFFFFF, _U32)
+    for li in range(l):                       # static unroll: bucket L
+        opnd = jnp.take(blk, sels[..., li], axis=0)       # (q, g, p, BN)
+        acc = acc & (opnd ^ flip[..., li, None])
+    acc = acc ^ post[..., None]               # De-Morgan OR-pass mask
+    grp = acc[:, :, 0]
+    for pi in range(1, p):
+        grp = grp & acc[:, :, pi]
+    out = grp[:, 0]
+    for gi in range(1, g):
+        out = out | grp[:, gi]
+    out_ref[...] = out
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def bulk_program(aug: jax.Array, sels: jax.Array, invs: jax.Array,
+                 post: jax.Array, *, block_n: int = 512,
+                 interpret: bool = True) -> jax.Array:
+    """Whole-bucket bulk sweep: aug (M+1, Nw) uint32 augmented packed
+    index (all-ones identity row at M), sels/invs (Q, G, P, L) selector/
+    inversion arrays, post (Q, G, P) uint32 xor masks -> rows (Q, Nw).
+
+    Result = OR over groups of [AND over passes of [(AND over literals of
+    possibly-inverted gathered rows) ^ post]].  Tail bits past the logical
+    record count are NOT masked here (the engine masks once per plan).
+    The word axis pads to ``block_n`` with zero words — padded selector
+    gathers read zeros and the extra columns are sliced off.
+    """
+    m1, nw = aug.shape
+    q = sels.shape[0]
+    nwp = -(-nw // block_n) * block_n
+    augp = jnp.pad(aug.astype(_U32), ((0, 0), (0, nwp - nw)))
+    grid = (nwp // block_n,)
+    rows = pl.pallas_call(
+        _bulk_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),            # sels
+            pl.BlockSpec(memory_space=pl.ANY),            # invs
+            pl.BlockSpec(memory_space=pl.ANY),            # post
+            pl.BlockSpec((m1, block_n), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((q, block_n), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, nwp), _U32),
+        interpret=interpret,
+    )(sels.astype(jnp.int32), invs.astype(jnp.int32), post.astype(_U32),
+      augp)
+    return rows[:, :nw]

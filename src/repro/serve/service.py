@@ -368,32 +368,49 @@ class BitmapService:
         """Pre-compile every bucketed executor the scheduler can hit for
         this query population BEFORE traffic arrives: for each distinct
         plan shape among ``queries``, run one dispatch at every
-        power-of-two bucket size up to ``max_batch``.  Coalesced batch
+        power-of-two bucket size up to ``max_batch`` — on EVERY backend
+        the cost model might route a wave to (``costmodel.candidates()``
+        for an ``auto`` session, the pinned backend otherwise).  The
+        bucket-executor caches are backend-keyed, so a cost-model backend
+        switch mid-traffic then lands on an already-compiled executor
+        instead of stalling a wave on compilation.  Coalesced batch
         compositions vary run to run (thread timing decides what lands
-        in a window), so without this a first-sight bucket size pays a
-        jit compile mid-serving — a latency spike standby can't hide.
-        Returns the number of warm dispatches."""
+        in a window), so without this a first-sight (bucket size,
+        backend) pair pays a jit compile mid-serving — a latency spike
+        standby can't hide.  Returns the number of warm dispatches."""
         from repro.engine import batch as engine_batch
-        from repro.engine import planner
+        from repro.engine import costmodel, planner
 
+        db = self._db
         reps: dict = {}
         for q in queries:
-            pl = self._db._plan_for(q)
+            pl = db._plan_for(q)
             if isinstance(pl, planner.CompositePlan):
                 continue                # served out-of-band, no executor
             _, shape, _, _ = engine_batch._lowered(pl)
             if shape is not None and shape not in reps:
-                reps[shape] = q
+                reps[shape] = pl
         cap = max(1, max_batch if max_batch is not None
                   else self.config.max_batch)
+        names = (costmodel.candidates() if db.backend == "auto"
+                 else (db.backend,))
+        view = db._view()
+        segmented = hasattr(view, "parts")
         dispatches = 0
         pad = self.config.pad_output
-        for q in reps.values():
+        for pl in reps.values():
             s = 1
             while s <= cap:
-                self._db.query_many([q] * s,
-                                    pad_output=pad).materialize()
-                dispatches += 1
+                for name in names:
+                    if segmented:
+                        engine_batch.execute_many_segments(
+                            view.parts, [pl] * s, backend=name)
+                    else:
+                        engine_batch.execute_many(
+                            view.packed, [pl] * s,
+                            num_records=view.num_records, backend=name,
+                            pad_output=pad)
+                    dispatches += 1
                 if s == cap:
                     break
                 s = min(s * 2, cap)

@@ -1,0 +1,130 @@
+"""Chaos smoke driver (CI): seeded fault schedules against the full
+ingest + serve + maintenance stack, clean run vs faulted run.
+
+For each fixed seed this runs the same workload twice — once clean, once
+under ``FaultPlan.random(seed, profile="all")`` — and requires:
+
+  * bit-identical per-wave query counts (retries / fallback / repair are
+    invisible in the data);
+  * bit-identical recovered state after reopening both stores from disk;
+  * nothing left quarantined once the schedule drains.
+
+Artifacts land in ``results/chaos/``: the fault schedule + fired-event
+report (``seed<N>.faults.json``) and the end-of-run service health
+(``seed<N>.health.json``) — on a CI failure these are what you read.
+
+Usage: python benchmarks/chaos.py [seed ...]      (default: 11 23 47)
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+SEEDS = (11, 23, 47)
+OUT_DIR = os.path.join("results", "chaos")
+M, BLOCK, WORDS, N_BLOCKS = 12, 96, 3, 8
+APPEND_RETRIES = 12
+
+
+def _blocks(seed: int):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, M, (BLOCK, WORDS), dtype=np.int32)
+            for _ in range(N_BLOCKS)]
+
+
+def _run(root: str, plan):
+    """One ingest+serve+maintenance workload; returns per-wave counts and
+    the final service health dict."""
+    from repro.db import BitmapDB
+    from repro.engine.planner import key
+    from repro.fault import FaultInjector
+
+    db = BitmapDB(num_keys=M, path=root, spill_records=256)
+    svc = db.serve(background=True, max_delay_ms=1.0, wave_retries=3,
+                   breaker_cooldown_s=0.05, idle_after_ms=50.0)
+    inj = FaultInjector(plan).install() if plan is not None else None
+    try:
+        waves = []
+        for block in _blocks(7):
+            for _ in range(APPEND_RETRIES):     # acked-or-retried ingest
+                try:
+                    db.append_encoded(block)
+                    break
+                except OSError:
+                    continue
+            else:
+                raise RuntimeError("append never acknowledged")
+            waves.append([svc.submit(key(i)).count for i in range(M)])
+    finally:
+        if inj is not None:
+            inj.uninstall()
+    if not svc._maint_ex.flush(30):
+        raise RuntimeError("maintenance flush timed out")
+    health = svc.health()
+    svc.close()
+    return waves, health, inj
+
+
+def _reopened_counts(root: str):
+    from repro.db.session import open_db
+    from repro.engine.planner import key
+
+    db = open_db(root, num_keys=M)
+    try:
+        return db.num_records, [db.query(key(i)).count for i in range(M)]
+    finally:
+        db.store.close()
+
+
+def run_seed(seed: int) -> list[str]:
+    """Returns a list of failure strings (empty = pass) and writes the
+    artifacts for this seed."""
+    from repro.fault import FaultPlan
+
+    plan = FaultPlan.random(seed, profile="all")
+    with tempfile.TemporaryDirectory() as tmp:
+        clean_waves, _, _ = _run(os.path.join(tmp, "clean"), None)
+        chaos_waves, health, inj = _run(os.path.join(tmp, "chaos"), plan)
+        n_a, counts_a = _reopened_counts(os.path.join(tmp, "clean"))
+        n_b, counts_b = _reopened_counts(os.path.join(tmp, "chaos"))
+
+    with open(os.path.join(OUT_DIR, f"seed{seed}.faults.json"), "w") as f:
+        f.write(inj.report_json())
+    with open(os.path.join(OUT_DIR, f"seed{seed}.health.json"), "w") as f:
+        json.dump(health, f, indent=2, sort_keys=True, default=repr)
+        f.write("\n")
+
+    failures = []
+    if chaos_waves != clean_waves:
+        failures.append("served bits differ from the clean run")
+    if (n_a, counts_a) != (n_b, counts_b):
+        failures.append(f"recovered state differs: {n_a} vs {n_b} records")
+    if health["store"] and health["store"]["quarantined"]:
+        failures.append(f"segments left quarantined: "
+                        f"{health['store']['quarantined']}")
+    return failures
+
+
+def main(*argv: str) -> int:
+    seeds = tuple(int(a) for a in argv) or SEEDS
+    os.makedirs(OUT_DIR, exist_ok=True)
+    bad = 0
+    for seed in seeds:
+        failures = run_seed(seed)
+        status = "FAIL" if failures else "ok"
+        print(f"chaos seed={seed}: {status}"
+              + "".join(f"\n  - {f}" for f in failures), flush=True)
+        bad += bool(failures)
+    print(f"chaos smoke: {len(seeds) - bad}/{len(seeds)} seeds clean "
+          f"(artifacts in {OUT_DIR}/)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(*sys.argv[1:]))

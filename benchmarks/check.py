@@ -16,7 +16,8 @@ REQUIRED = ("engine_planner_query_batched", "engine_streaming_append",
             "serve_microbatch", "engine_backend_sweep")
 EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact_recover", "bitexact",
                    "allclose", "facade_overhead_ok", "microbatch_ok",
-                   "bulk_bw_ok", "bulk_not_slower_ok", "auto_ok")
+                   "bulk_bw_ok", "bulk_not_slower_ok", "auto_ok",
+                   "degraded_p99_ok")
 
 
 def main(path: str = "BENCH_engine.json") -> int:

@@ -346,17 +346,18 @@ class BitmapDB:
         self._plans_by_id.clear()
         self._stats_cache = None
 
-    def _execute(self, plans: Sequence, view,
-                 pad_output: bool = False) -> tuple:
+    def _execute(self, plans: Sequence, view, pad_output: bool = False,
+                 backend: str | None = None) -> tuple:
         # live sessions hand their exact per-key stats to the cost model
         # (read-only wrappers only once the caller has paid for .stats)
         stats = self.stats if self._counts is not None else None
+        be = backend if backend is not None else self.backend
         if hasattr(view, "parts"):              # StoredIndex
             return engine_batch.execute_many_segments(
-                view.parts, plans, backend=self.backend, stats=stats)
+                view.parts, plans, backend=be, stats=stats)
         return engine_batch.execute_many(
             view.packed, plans, num_records=view.num_records,
-            backend=self.backend, pad_output=pad_output, stats=stats)
+            backend=be, pad_output=pad_output, stats=stats)
 
     def _view(self):
         """Immutable snapshot the lazy batch executes against — a query
@@ -442,15 +443,18 @@ class BitmapDB:
             out["decision"] = None
         return out
 
-    def query_many(self, queries: Sequence, *,
-                   pad_output: bool = False) -> ResultBatch:
+    def query_many(self, queries: Sequence, *, pad_output: bool = False,
+                   backend: str | None = None) -> ResultBatch:
         """A batch of expressions in ONE lazily executed bucketed dispatch
         set; returns a :class:`ResultBatch` (sequence of lazy
         :class:`Result` handles, in input order).  ``pad_output=True``
         pads the materialized arrays' query axis to a power of two
         (handles still cover exactly the submitted queries) — the
         serving scheduler uses this so varying coalesced batch sizes
-        reuse compiled shapes instead of retracing."""
+        reuse compiled shapes instead of retracing.  ``backend=``
+        overrides the session backend for this one batch — the serving
+        path's circuit breaker uses it to route a wave to its fallback
+        backend without touching session state."""
         if not isinstance(queries, (list, tuple)):
             queries = list(queries)
         # inlined _plan_for fast path: submission of a steady-state
@@ -471,7 +475,7 @@ class BitmapDB:
             self._cache_counters["id_hits"] += fast_hits
         view = self._view()
         batch_run = LazyBatch(
-            lambda: self._execute(plans, view, pad_output))
+            lambda: self._execute(plans, view, pad_output, backend))
         return ResultBatch(batch_run, self.num_records, queries)
 
     def serve_step(self):

@@ -50,6 +50,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.engine import backends, costmodel, planner, policy
+from repro.fault import seam as _fault_seam
 
 #: One pass: (literals tuple[(key, inverted)], post_invert).  Program:
 #: tuple of groups, each a tuple of passes.
@@ -283,6 +284,9 @@ def _serve(packed: jax.Array, num_records: int, plans: Sequence,
     then drawn from a small closed set, so a micro-batching scheduler's
     varying batch compositions never pay a first-sight jit compile on
     the re-assembly ops — callers index the real prefix."""
+    # fault seam: an injected dispatch error aborts the whole wave here,
+    # exercising the service's retry -> backend-fallback -> isolation path
+    _fault_seam.fire("engine.dispatch", backend=name, queries=len(plans))
     m, nw = packed.shape
     buckets, zeros, composite = part
     q = len(plans)
@@ -384,6 +388,7 @@ def _serve_stacked(stack: jax.Array, nrecs: Sequence[int], plans: Sequence,
     packed buffers (S, M, Nw) holding ``nrecs[s]`` records each — one
     vmapped dispatch per bucket covers every segment.  Returns
     (rows (S, Q, Nw), counts (S, Q)) in input query order."""
+    _fault_seam.fire("engine.dispatch", backend=name, queries=len(plans))
     s, m, nw = stack.shape
     buckets, zeros, composite = part
     q = len(plans)

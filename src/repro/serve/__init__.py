@@ -1,7 +1,9 @@
 from repro.serve.step import make_prefill_step, make_decode_step  # noqa: F401
 from repro.serve.step import make_bitmap_query_step  # noqa: F401
-from repro.serve.service import (BitmapService, QueryFuture,  # noqa: F401
-                                 ServiceClosed, ServiceConfig,
+from repro.serve.service import (BitmapService, DeadlineExceeded,  # noqa: F401
+                                 QueryFuture, ServiceClosed, ServiceConfig,
                                  ServiceMetrics, ServiceOverloaded)
 from repro.serve.maintenance import (IndexMaintenance,  # noqa: F401
                                      MaintenanceExecutor)
+from repro.serve.resilience import (CircuitBreaker,  # noqa: F401
+                                    RetryPolicy, is_transient)

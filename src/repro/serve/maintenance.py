@@ -1,5 +1,5 @@
-"""Background store maintenance: spill, compaction, and gc off the append
-path.
+"""Background store maintenance: spill, compaction, gc, and scrub off the
+append path.
 
 The paper's duty cycle only pays off if the ingest path stays on its fast
 track during peak load: a synchronous segment spill (device readback +
@@ -11,7 +11,12 @@ analogue:
   * :class:`MaintenanceExecutor` — one daemon worker thread draining a
     deduplicated task queue.  ``submit(kind, fn)`` enqueues unless a task
     of that ``kind`` is already pending, so an append storm that crosses
-    the flush threshold a thousand times schedules ONE spill.
+    the flush threshold a thousand times schedules ONE spill.  Task
+    bodies run under a :class:`repro.serve.resilience.RetryPolicy`:
+    transient failures (an EIO blip, an injected hiccup) back off and
+    retry on the worker; only the final failure of a task lands in the
+    per-kind failure counters and ``last_failure`` record that
+    ``stats()`` (and through it ``service.metrics()``) surfaces.
   * :class:`IndexMaintenance` — wires a durable
     :class:`repro.engine.runtime.StreamingIndexer` onto an executor: the
     indexer's threshold spill becomes an enqueue (appends return
@@ -19,13 +24,17 @@ analogue:
     ``prepare_spill`` / ``commit_spill`` protocol on the worker (crash
     between the phases loses nothing — the WAL still covers every
     block), and a committed spill chains a compaction pass, which chains
-    a gc sweep.  Each task reports stats (records flushed, segments
-    merged, bytes reclaimed) into the executor's log.
+    a gc sweep.  A ``scrub`` task CRC-verifies every committed segment
+    and repairs corruption from the live in-memory index (the replica
+    that is, by construction, bit-identical to what the segment held) —
+    the service schedules one on every standby entry, turning idle time
+    into integrity checking.  Each task reports stats into the
+    executor's log.
 
 Serving stays consistent throughout: queries snapshot the in-memory
 packed view (a functional jax array pinned with its record count by the
-indexer mutex), so a spill or merge mid-flight never changes a result
-bit.
+indexer mutex), so a spill, merge, or segment repair mid-flight never
+changes a result bit.
 """
 from __future__ import annotations
 
@@ -33,25 +42,40 @@ import collections
 import threading
 from typing import Callable
 
+import numpy as np
+
+from repro.fault import seam
+from repro.serve.resilience import RetryPolicy, is_transient
+
 __all__ = ["MaintenanceExecutor", "IndexMaintenance"]
 
 
 class MaintenanceExecutor:
     """One background worker, a deduplicated task queue, and a bounded
     log of what ran.  Tasks are ``fn() -> dict`` (the dict is the task's
-    stats line); exceptions are captured into :attr:`errors`, never
-    propagated into the worker loop."""
+    stats line); transient exceptions retry under ``retry_policy``, and
+    a task's FINAL exception is captured into :attr:`errors` /
+    :attr:`failures` / :attr:`last_failure`, never propagated into the
+    worker loop."""
 
     def __init__(self, *, name: str = "repro-maintenance",
-                 log_limit: int = 256):
+                 log_limit: int = 256,
+                 retry_policy: RetryPolicy | None = None):
         self._cv = threading.Condition()
         self._queue: collections.deque = collections.deque()
         self._pending: set[str] = set()
         self._running: str | None = None
         self._open = True
+        self.retry_policy = (retry_policy if retry_policy is not None
+                             else RetryPolicy())
         self.counts: collections.Counter = collections.Counter()
         self.log: collections.deque = collections.deque(maxlen=log_limit)
         self.errors: list[tuple[str, BaseException]] = []
+        self.failures: collections.Counter = collections.Counter()
+        self.retries: collections.Counter = collections.Counter()
+        #: kind -> repr of its most recent final failure
+        self.last_failure: dict[str, str] = {}
+        self._task_seq = 0             # retry-jitter seed (deterministic)
         self._thread = threading.Thread(target=self._run, name=name,
                                         daemon=True)
         self._thread.start()
@@ -88,16 +112,36 @@ class MaintenanceExecutor:
             self._cv.notify_all()
         self._thread.join(timeout=timeout)
 
+    def kill(self) -> None:
+        """Crash simulation: stop the worker WITHOUT draining — queued
+        tasks are dropped on the floor, exactly like the process dying
+        between maintenance passes.  The chaos harness uses this to
+        place crash instants; everything dropped must be recoverable
+        from WAL + manifest alone."""
+        with self._cv:
+            self._open = False
+            self._queue.clear()
+            self._pending.clear()
+            self._cv.notify_all()
+        self._thread.join(timeout=5.0)
+
     def stats(self) -> dict:
-        """Completed-task counters + the most recent stats line per
-        kind."""
+        """Completed-task counters, per-kind failure/retry accounting,
+        and the most recent stats line per kind.  ``errors`` stays an
+        int (total final failures) for drop-in assertion compatibility;
+        ``failures``/``retries`` break it down per kind and
+        ``last_failure`` carries each kind's most recent exception."""
         with self._cv:
             last: dict[str, dict] = {}
             for kind, info in self.log:
                 last[kind] = info
             return {"completed": dict(self.counts),
                     "pending": len(self._queue),
-                    "errors": len(self.errors), "last": last}
+                    "errors": len(self.errors),
+                    "failures": dict(self.failures),
+                    "retries": dict(self.retries),
+                    "last_failure": dict(self.last_failure),
+                    "last": last}
 
     # ------------------------------------------------------------- worker
     def _run(self) -> None:
@@ -106,16 +150,34 @@ class MaintenanceExecutor:
                 while self._open and not self._queue:
                     self._cv.wait()
                 if not self._queue:
-                    return                      # closed and drained
+                    return                      # closed/killed and drained
                 kind, fn = self._queue.popleft()
                 self._pending.discard(kind)
                 self._running = kind
+                self._task_seq += 1
+                seed = self._task_seq
+
+            def body(kind=kind, fn=fn):
+                # the seam fires per ATTEMPT: a scheduled task_error on
+                # occurrence k is transient by construction — the retry
+                # advances past it
+                seam.fire("maintenance.task", kind=kind)
+                return fn()
+
+            def on_retry(attempt, exc, kind=kind):
+                with self._cv:
+                    self.retries[kind] += 1
+
             try:
-                info = fn()
+                info = self.retry_policy.call(
+                    body, seed=seed, retryable=is_transient,
+                    on_retry=on_retry)
             except BaseException as e:          # noqa: BLE001 — logged
                 info = {"error": repr(e)}
                 with self._cv:
                     self.errors.append((kind, e))
+                    self.failures[kind] += 1
+                    self.last_failure[kind] = repr(e)
             with self._cv:
                 self.counts[kind] += 1
                 self.log.append((kind, info or {}))
@@ -124,7 +186,7 @@ class MaintenanceExecutor:
 
 
 class IndexMaintenance:
-    """Moves a durable session's spill/compaction/gc onto a
+    """Moves a durable session's spill/compaction/gc/scrub onto a
     :class:`MaintenanceExecutor` (see module docstring).  ``detach()``
     restores synchronous threshold spills and the store's auto
     compaction."""
@@ -150,6 +212,11 @@ class IndexMaintenance:
 
     def schedule_gc(self) -> None:
         self.ex.submit("gc", self._gc)
+
+    def schedule_scrub(self) -> None:
+        """CRC-verify + self-heal the committed segments in the
+        background (the service enqueues this on standby entry)."""
+        self.ex.submit("scrub", self._scrub)
 
     def detach(self) -> None:
         self.si.set_spill_hook(None)
@@ -183,3 +250,24 @@ class IndexMaintenance:
         return {"removed": len(st.removed),
                 "bytes_reclaimed": st.bytes_reclaimed,
                 "skipped_inflight": len(st.skipped_inflight)}
+
+    def _replica(self, meta) -> np.ndarray | None:
+        """A known-good copy of a segment's packed words, re-extracted
+        from the live in-memory index (which covers every record the
+        store does — appends splice in memory first).  None when the
+        view doesn't cover the segment (shouldn't happen on a live
+        session; scrub then quarantines instead of repairing)."""
+        from repro.engine import policy
+        buf, n = self.si.view()
+        if meta.start_record + meta.num_records > n:
+            return None
+        return np.asarray(policy.extract_packed(
+            buf, meta.start_record, meta.num_records))
+
+    def _scrub(self) -> dict:
+        st = self.store.scrub(repair=self._replica)
+        if st.repaired:
+            self.schedule_gc()                 # repairs may leave .tmp debris
+        return {"checked": st.checked, "corrupt": len(st.corrupt),
+                "repaired": len(st.repaired),
+                "quarantined": len(st.quarantined)}

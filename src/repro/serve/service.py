@@ -53,17 +53,42 @@ import numpy as np
 
 from repro.core.bic import BICConfig, PaperConfig
 from repro.core.elastic import ElasticScheduler, EnergyReport, PowerState
+from repro.serve.resilience import CircuitBreaker, RetryPolicy, is_transient
 
 __all__ = ["BitmapService", "ServiceConfig", "ServiceMetrics",
-           "QueryFuture", "ServiceOverloaded", "ServiceClosed"]
+           "QueryFuture", "ServiceOverloaded", "ServiceClosed",
+           "DeadlineExceeded"]
 
 
 class ServiceOverloaded(RuntimeError):
-    """Admission control rejected (or timed out) a submission."""
+    """Admission control rejected (or timed out) a submission.  Carries
+    the admission decision's inputs as fields (and in the message), so a
+    load-shedding caller can adapt instead of parse."""
+
+    def __init__(self, reason: str, *, queue_depth: int | None = None,
+                 limit: int | None = None, admission: str | None = None):
+        detail = [reason]
+        if queue_depth is not None:
+            detail.append(f"queue_depth={queue_depth}")
+        if limit is not None:
+            detail.append(f"limit={limit}")
+        if admission is not None:
+            detail.append(f"admission={admission!r}")
+        super().__init__(" ".join([detail[0]]
+                                  + ([f"({', '.join(detail[1:])})"]
+                                     if len(detail) > 1 else [])))
+        self.queue_depth = queue_depth
+        self.limit = limit
+        self.admission = admission
 
 
 class ServiceClosed(RuntimeError):
     """submit() after close()."""
+
+
+class DeadlineExceeded(RuntimeError):
+    """A query's per-request deadline budget expired before its wave
+    dispatched; the future rejects instead of serving stale-late."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +106,20 @@ class ServiceConfig:
     #: compiled shapes instead of paying first-sight jit retraces
     pad_output: bool = True
     latency_window: int = 8192    # per-request latency samples kept
+    # --- self-healing knobs (see ARCHITECTURE.md, "Fault fabric")
+    #: every submission's default deadline budget (None = no deadline);
+    #: ``submit(deadline_ms=)`` overrides per query
+    default_deadline_ms: float | None = None
+    wave_retries: int = 2         # transient wave failures retried
+    retry_base_ms: float = 5.0    # first retry backoff (grows, jittered)
+    breaker_threshold: int = 3    # confirmed backend failures to trip
+    breaker_cooldown_s: float = 2.0
+    #: backend degraded waves fall back to (the reference executor:
+    #: slowest, simplest, last to break)
+    fallback_backend: str = "ref"
+    #: enqueue a background CRC scrub of the committed segments on every
+    #: standby entry (durable sessions) — idle time buys integrity
+    scrub_on_standby: bool = True
     bic_config: BICConfig = PaperConfig
     power_state: PowerState = PowerState()
 
@@ -92,6 +131,11 @@ class ServiceConfig:
         if self.admission not in ("block", "reject"):
             raise ValueError(f"admission must be 'block' or 'reject', "
                              f"got {self.admission!r}")
+        if self.wave_retries < 0:
+            raise ValueError("wave_retries must be >= 0")
+        if self.default_deadline_ms is not None \
+                and self.default_deadline_ms <= 0:
+            raise ValueError("default_deadline_ms must be positive")
 
 
 class QueryFuture:
@@ -192,13 +236,15 @@ class ServiceMetrics:
     energy_per_query_j: float
     plan_cache: dict
     maintenance: dict | None
+    health: dict
 
 
 class _Item:
-    __slots__ = ("query", "future", "t")
+    __slots__ = ("query", "future", "t", "deadline")
 
-    def __init__(self, query, future, t):
+    def __init__(self, query, future, t, deadline=None):
         self.query, self.future, self.t = query, future, t
+        self.deadline = deadline       # absolute perf_counter, or None
 
 
 class BitmapService:
@@ -230,6 +276,17 @@ class BitmapService:
         self._standby_entries = 0
         self._wakes = 0
         self._spans = {"busy": 0.0, "awake": 0.0, "standby": 0.0}
+        # --- self-healing state (see _execute)
+        self._retry = RetryPolicy(max_attempts=config.wave_retries + 1,
+                                  base_delay_s=config.retry_base_ms / 1e3)
+        self._breaker = CircuitBreaker(
+            failure_threshold=config.breaker_threshold,
+            cooldown_s=config.breaker_cooldown_s)
+        self._wave_retries = 0         # transient wave failures retried
+        self._degraded_waves = 0       # waves served by the fallback
+        self._fallback_queries = 0     # queries those waves carried
+        self._deadline_rejected = 0    # futures rejected past-deadline
+        self._isolated_failures = 0    # per-query failures isolated
         # --- background maintenance (durable sessions only)
         self._maint = None
         self._maint_ex = None
@@ -281,13 +338,22 @@ class BitmapService:
             return self._state
 
     # --------------------------------------------------------------- submit
-    def submit(self, query, *, timeout: float | None = None) -> QueryFuture:
+    def submit(self, query, *, timeout: float | None = None,
+               deadline_ms: float | None = None) -> QueryFuture:
         """Enqueue one query (expression / predicate / pre-built plan —
         anything the session's ``query_many`` accepts); returns its
         :class:`QueryFuture` immediately.  Admission control applies:
         with a full queue, ``block`` waits (``timeout`` bounds it),
-        ``reject`` raises :class:`ServiceOverloaded`."""
+        ``reject`` raises :class:`ServiceOverloaded`.
+
+        ``deadline_ms`` (default ``config.default_deadline_ms``) is the
+        query's end-to-end latency budget: if its wave has not
+        dispatched by then — retries, degraded-mode fallbacks, and
+        queue time all count against it — the future rejects with
+        :class:`DeadlineExceeded` instead of serving arbitrarily late."""
         cfg = self.config
+        if deadline_ms is None:
+            deadline_ms = cfg.default_deadline_ms
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
         while True:
@@ -305,7 +371,9 @@ class BitmapService:
                     elif cfg.admission == "reject":
                         self._rejected += 1
                         raise ServiceOverloaded(
-                            f"queue full ({cfg.max_queue} pending)")
+                            "queue full",
+                            queue_depth=len(self._pending),
+                            limit=cfg.max_queue, admission=cfg.admission)
                     else:
                         left = (None if deadline is None
                                 else deadline - time.perf_counter())
@@ -314,12 +382,18 @@ class BitmapService:
                             self._rejected += 1
                             raise ServiceOverloaded(
                                 f"queue full after {timeout}s "
-                                "backpressure")
+                                "backpressure",
+                                queue_depth=len(self._pending),
+                                limit=cfg.max_queue,
+                                admission=cfg.admission)
                         continue              # re-check queue + openflag
                 else:
+                    now = time.perf_counter()
                     fut = QueryFuture(query)
-                    self._pending.append(
-                        _Item(query, fut, time.perf_counter()))
+                    self._pending.append(_Item(
+                        query, fut, now,
+                        None if deadline_ms is None
+                        else now + deadline_ms / 1e3))
                     self._inflight += 1
                     self._cv.notify_all()
                     break
@@ -392,8 +466,12 @@ class BitmapService:
                 reps[shape] = pl
         cap = max(1, max_batch if max_batch is not None
                   else self.config.max_batch)
+        # pinned sessions also warm the breaker's fallback backend: a
+        # degraded wave must not pay a first-sight compile on top of the
+        # failure that degraded it (auto candidates already include ref)
         names = (costmodel.candidates() if db.backend == "auto"
-                 else (db.backend,))
+                 else tuple(dict.fromkeys(
+                     (db.backend, self.config.fallback_backend))))
         view = db._view()
         segmented = hasattr(view, "parts")
         dispatches = 0
@@ -425,6 +503,18 @@ class BitmapService:
                     self._charge_locked(time.perf_counter())
                 self._state = "standby"
                 self._standby_entries += 1
+        self._schedule_standby_scrub()
+
+    def _schedule_standby_scrub(self) -> None:
+        """Standby entry enqueues one background CRC scrub (deduplicated
+        by the executor): the duty cycle's idle phase doubles as the
+        integrity-checking window."""
+        if not self.config.scrub_on_standby or self._maint is None:
+            return
+        try:
+            self._maint.schedule_scrub()
+        except RuntimeError:
+            pass                       # executor already closed (shutdown)
 
     # ------------------------------------------------------------ scheduler
     def _run(self) -> None:
@@ -446,6 +536,7 @@ class BitmapService:
         max_delay = cfg.max_delay_ms / 1e3
         cv = self._cv
         while True:
+            entered_standby = False
             with cv:
                 # wait for work; a long-enough lull clock-gates us
                 idle_t0 = time.perf_counter()
@@ -459,8 +550,17 @@ class BitmapService:
                                 self._charge_locked(time.perf_counter())
                             self._state = "standby"
                             self._standby_entries += 1
+                            entered_standby = True
+                            break
                     else:
                         cv.wait()
+            if entered_standby:
+                # outside the cv: the scrub enqueue takes the executor's
+                # lock, and submissions must not wait on it
+                self._schedule_standby_scrub()
+            with cv:
+                while self._openflag and not self._pending:
+                    cv.wait()                   # standby: wait for a wake
                 if not self._pending:
                     break                       # closed and drained
                 if self._state == "standby":
@@ -493,40 +593,128 @@ class BitmapService:
                 self._cv.notify_all()
             self._execute(batch)
 
+    def _wave(self, queries: list, backend: str | None) -> tuple:
+        """One coalesced dispatch: (rows, counts, n).  ``backend=None``
+        serves on the session's preferred backend; a name routes the
+        whole wave there (the breaker's degraded path)."""
+        rb = self._db.query_many(queries, pad_output=self.config.pad_output,
+                                 backend=backend)
+        # read the record count AFTER query_many snapshots its view:
+        # rows past the view are masked zero, so an at-most-newer n
+        # can only be a harmless over-bound for .ids — the stale
+        # ordering would silently drop freshly appended matches
+        n = self._db.num_records
+        rows, counts = rb.materialize()
+        jax.block_until_ready(rows)
+        return rows, counts, n
+
+    def _serve_wave(self, queries: list) -> tuple[tuple | None, str]:
+        """The self-healing dispatch ladder for one wave of queries.
+
+        1. **retry** — transient failures (I/O blips, injected faults)
+           on the preferred backend back off and retry, with
+           deterministic jitter seeded by the wave number.
+        2. **breaker + fallback** — when retries exhaust AND the same
+           wave succeeds on ``fallback_backend``, the failure is
+           confirmed backend-specific: the breaker records it (tripping
+           after ``breaker_threshold``) and the wave is served degraded
+           — slower, never wrong.  An open breaker skips the preferred
+           backend entirely until a cooldown probe closes it.
+        3. **give up the wave** — both paths failed; the caller
+           falls through to per-query isolation (a poisoned QUERY, not
+           a broken backend, so the breaker records nothing).
+
+        Returns ``(result | None, mode)`` with mode one of
+        ``"preferred"``/``"fallback"``/``"failed"``."""
+        cfg = self.config
+        fallback = cfg.fallback_backend
+        have_fallback = self._db.backend != fallback
+
+        def preferred():
+            return self._wave(queries, None)
+
+        def on_retry(attempt, exc):
+            with self._cv:
+                self._wave_retries += 1
+
+        if self._breaker.allow():
+            try:
+                out = self._retry.call(preferred, seed=self._batches,
+                                       retryable=is_transient,
+                                       on_retry=on_retry)
+            except BaseException:               # noqa: BLE001 — ladder
+                if not have_fallback:
+                    # no second opinion available: cannot distinguish a
+                    # broken backend from a poisoned query, so the
+                    # breaker learns nothing
+                    return None, "failed"
+                try:
+                    out = self._wave(queries, fallback)
+                except BaseException:           # noqa: BLE001 — ladder
+                    # both backends failed -> the queries are the
+                    # problem; the breaker learns nothing from them
+                    return None, "failed"
+                # fallback succeeded where the preferred backend kept
+                # failing: THAT is a confirmed backend failure
+                self._breaker.record_failure()
+                return out, "fallback"
+            self._breaker.record_success()
+            return out, "preferred"
+        if not have_fallback:
+            return None, "failed"
+        try:
+            return self._wave(queries, fallback), "fallback"
+        except BaseException:                   # noqa: BLE001 — ladder
+            return None, "failed"
+
     def _execute(self, batch: list[_Item]) -> None:
         with self._elock:                       # waiting span was "awake"
             self._charge_locked(time.perf_counter())
         lats: list[float] = []
-        try:
-            rb = self._db.query_many([it.query for it in batch],
-                                     pad_output=self.config.pad_output)
-            # read the record count AFTER query_many snapshots its view:
-            # rows past the view are masked zero, so an at-most-newer n
-            # can only be a harmless over-bound for .ids — the stale
-            # ordering would silently drop freshly appended matches
-            n = self._db.num_records
-            rows, counts = rb.materialize()
-            jax.block_until_ready(rows)
-        except BaseException:
-            # batch-level failure (e.g. one bad key id poisons planning):
-            # isolate per query so one caller's typo cannot fail another
-            # caller's future
+        # deadline budgets: queries whose budget expired in the queue are
+        # excluded from the dispatch (their rejection is sequenced with
+        # the wave's resolutions below, preserving per-caller order)
+        now = time.perf_counter()
+        live = [it for it in batch
+                if it.deadline is None or now <= it.deadline]
+        expired = len(batch) - len(live)
+        out, mode = (self._serve_wave([it.query for it in live])
+                     if live else ((None, None, 0), "preferred"))
+        if mode == "failed":
+            # wave-level failure survived retry AND fallback (e.g. one
+            # bad key id poisons planning): isolate per query so one
+            # caller's typo cannot fail another caller's future
             for it in batch:
                 self._resolve_seq += 1
                 it.future.resolve_seq = self._resolve_seq
+                if it.deadline is not None and it.deadline < now:
+                    it.future._reject(DeadlineExceeded(
+                        f"deadline budget exhausted before dispatch "
+                        f"({(now - it.t) * 1e3:.1f}ms in queue)"))
+                    continue
                 try:
                     r, c = self._db.query_many([it.query]).materialize()
                     jax.block_until_ready(r)
                     it.future._resolve(r, c, 0, self._db.num_records)
                 except BaseException as e:      # noqa: BLE001 — to future
+                    with self._cv:
+                        self._isolated_failures += 1
                     it.future._reject(e)
         else:
+            rows, counts, n = out
             done = time.perf_counter()
-            for qi, it in enumerate(batch):
-                lats.append(done - it.t)
+            qi = 0
+            for it in batch:
                 self._resolve_seq += 1
                 it.future.resolve_seq = self._resolve_seq
+                if it.deadline is not None and it.deadline < now:
+                    it.future._reject(DeadlineExceeded(
+                        f"deadline budget exhausted before dispatch "
+                        f"({(now - it.t) * 1e3:.1f}ms in queue)"))
+                    continue
+                lats.append(done - it.t)
                 it.future._resolve(rows, counts, qi, n)
+                qi += 1
         with self._elock:                       # execution span was "busy"
             self._charge_locked(time.perf_counter(), busy=True)
         with self._cv:          # meters mutate under the cv (metrics()
@@ -535,6 +723,10 @@ class BitmapService:
             self._batches += 1
             self._batch_sizes.append(len(batch))
             self._inflight -= len(batch)
+            self._deadline_rejected += expired
+            if mode == "fallback":
+                self._degraded_waves += 1
+                self._fallback_queries += len(live)
             self._cv.notify_all()               # drain()ers
 
     # --------------------------------------------------------------- energy
@@ -568,6 +760,39 @@ class BitmapService:
         return self._energy
 
     # -------------------------------------------------------------- metrics
+    def health(self) -> dict:
+        """The self-healing surface in one dict: circuit-breaker state,
+        store quarantines/repairs, retry and degraded-mode counters, and
+        per-kind maintenance failure accounting.  ``degraded`` is True
+        whenever the service is currently serving around a failure
+        (breaker not closed, or a segment quarantined) — correct but
+        slower, repair in progress."""
+        breaker = self._breaker.snapshot()
+        store = getattr(self._db, "store", None)
+        store_health = store.health() if store is not None else None
+        maint = (self._maint_ex.stats() if self._maint_ex is not None
+                 else None)
+        with self._cv:
+            counters = {
+                "wave_retries": self._wave_retries,
+                "degraded_waves": self._degraded_waves,
+                "fallback_queries": self._fallback_queries,
+                "deadline_rejected": self._deadline_rejected,
+                "isolated_failures": self._isolated_failures,
+            }
+        degraded = breaker["state"] != "closed" or bool(
+            store_health and store_health["quarantined"])
+        return {"degraded": degraded,
+                "breaker": breaker,
+                "fallback_backend": self.config.fallback_backend,
+                "store": store_health,
+                "maintenance_failures": (
+                    {"failures": maint["failures"],
+                     "retries": maint["retries"],
+                     "last_failure": maint["last_failure"]}
+                    if maint is not None else None),
+                **counters}
+
     def metrics(self) -> ServiceMetrics:
         with self._elock:
             self._charge_locked(time.perf_counter())
@@ -600,7 +825,8 @@ class BitmapService:
             energy_per_query_j=total_j / served if served else 0.0,
             plan_cache=self._db.cache_stats()
             if hasattr(self._db, "cache_stats") else {},
-            maintenance=maint)
+            maintenance=maint,
+            health=self.health())
 
     def __repr__(self) -> str:
         return (f"<BitmapService {self.state} served={self._served} "

@@ -14,5 +14,5 @@ Public surface:
 from repro.store.format import CorruptFileError  # noqa: F401
 from repro.store.manifest import Manifest, SegmentMeta  # noqa: F401
 from repro.store.store import (CompactionStats, GCStats,  # noqa: F401
-                               SegmentStore, StoredIndex, np_splice,
-                               open_index, recover_index)
+                               ScrubStats, SegmentStore, StoredIndex,
+                               np_splice, open_index, recover_index)

@@ -19,10 +19,13 @@ Two container shapes cover every durability need in the repo:
     and returns everything before it.
 
 Only stdlib + numpy: this module sits *below* the engine and must import
-nothing above it.
+nothing above it (:mod:`repro.fault.seam`, the fault-injection seam the
+writers and readers fire through, is itself stdlib-only and sits beside
+this module — one global ``None`` check when no injector is installed).
 """
 from __future__ import annotations
 
+import errno
 import io
 import json
 import os
@@ -31,6 +34,8 @@ import zlib
 from typing import Any, BinaryIO, Iterator
 
 import numpy as np
+
+from repro.fault import seam
 
 ARRAY_MAGIC = b"RBSF"          # Repro Bitmap Store File
 LOG_MAGIC = b"RBWL"            # Repro Bitmap Write-ahead Log
@@ -67,11 +72,29 @@ def atomic_replace(tmp_path: str, final_path: str) -> None:
 
 
 def write_bytes_atomic(path: str, data: bytes) -> None:
+    act = seam.fire("format.write", path=path, size=len(data))
     tmp = path + ".tmp"
-    with open(tmp, "wb") as f:
-        f.write(data)
-        f.flush()
-        os.fsync(f.fileno())
+    if act and act.get("torn_bytes") is not None:
+        # injected crash-mid-write: a prefix of the payload reaches the
+        # .tmp and "the process dies" before any cleanup — the final
+        # name never appears (atomicity holds) and the orphan debris is
+        # exactly what gc() must collect
+        with open(tmp, "wb") as f:
+            f.write(data[:act["torn_bytes"]])
+        raise OSError(errno.EIO, f"injected torn write: {path}")
+    try:
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+    except BaseException:
+        # a FAILED (not crashed) write cleans up its own debris: the
+        # caller sees the error, the directory holds no orphan .tmp
+        try:
+            os.remove(tmp)
+        except OSError:
+            pass
+        raise
     atomic_replace(tmp, path)
 
 
@@ -111,6 +134,9 @@ def read_array_file(path: str, *, verify: bool = True
     magic/version/CRC mismatch or truncation."""
     with open(path, "rb") as f:
         data = f.read()
+    act = seam.fire("format.read", path=path, data=data)
+    if act and act.get("data") is not None:
+        data = act["data"]              # injected read-side bit rot
     if data[:4] != ARRAY_MAGIC:
         raise CorruptFileError(f"{path}: bad magic {data[:4]!r}")
     if len(data) < 12:
@@ -154,13 +180,27 @@ def write_log_header(f: BinaryIO) -> None:
 
 
 def append_log_entry(f: BinaryIO, meta: dict, payload: bytes) -> None:
-    """Append one durable length+CRC framed entry (meta JSON + raw bytes)."""
+    """Append one durable length+CRC framed entry (meta JSON + raw bytes).
+
+    Failure modes surface, never corrupt silently: a torn frame (injected
+    crash) or a failed fsync raises — the caller must treat the entry as
+    NOT durable (see ``WriteAheadLog.append_block``, which rewinds the
+    handle to the last intact frame boundary so later appends never land
+    behind an unreachable tail)."""
     head = json.dumps(meta, sort_keys=True).encode()
     body = _U32S.pack(len(head)) + head + payload
-    f.write(_U32S.pack(len(body)))
-    f.write(_U32S.pack(crc32(body)))
-    f.write(body)
+    frame = _U32S.pack(len(body)) + _U32S.pack(crc32(body)) + body
+    act = seam.fire("log.append", path=getattr(f, "name", ""),
+                    size=len(frame))
+    if act and act.get("torn_bytes") is not None:
+        f.write(frame[:act["torn_bytes"]])  # crash mid-append: torn tail
+        f.flush()
+        raise OSError(errno.EIO, "injected torn log append")
+    f.write(frame)
     f.flush()
+    if act and act.get("fail_fsync"):
+        raise OSError(errno.EIO, "injected fsync failure (entry written "
+                                 "but not durable)")
     os.fsync(f.fileno())
 
 

@@ -49,7 +49,8 @@ from __future__ import annotations
 import dataclasses
 import os
 import threading
-from typing import Sequence
+import time
+from typing import Callable, Sequence
 
 import numpy as np
 
@@ -124,6 +125,24 @@ class CompactionStats:
 
 
 @dataclasses.dataclass(frozen=True)
+class ScrubStats:
+    """What a :meth:`SegmentStore.scrub` pass found and did.  ``corrupt``
+    names every segment whose read failed CRC/meta validation this pass;
+    each such segment lands in exactly one of ``repaired`` (a supplied
+    replica rewrote it, or a clean re-read proved the corruption was
+    read-side) or ``quarantined`` (no replica — served around until one
+    appears).  Truthy iff corruption was found."""
+    checked: int = 0
+    corrupt: tuple[str, ...] = ()
+    repaired: tuple[str, ...] = ()
+    quarantined: tuple[str, ...] = ()
+    dry_run: bool = False
+
+    def __bool__(self) -> bool:
+        return bool(self.corrupt)
+
+
+@dataclasses.dataclass(frozen=True)
 class GCStats:
     """What a :meth:`SegmentStore.gc` pass removed (or, with
     ``dry_run=True``, would remove).  Iterates / contains like the plain
@@ -178,6 +197,15 @@ class SegmentStore:
         # filenames a two-phase flush/merge is writing right now: gc must
         # treat them (and their .tmp twins) as live, not garbage
         self._inflight: set[str] = set()
+        # segments whose last read failed validation: file -> reason.
+        # Quarantined segments stay in the manifest (their records are
+        # still the stream's records) but compaction refuses to merge
+        # them and the serving layer substitutes a replica / serves
+        # around until scrub() repairs or clears them.
+        self._quarantined: dict[str, str] = {}
+        self.quarantine_events = 0     # lifetime quarantine entries
+        self.repairs = 0               # lifetime un-quarantines
+        self.read_retries = 0          # transient read errors retried away
 
     # ------------------------------------------------------------- accessors
     @property
@@ -259,9 +287,28 @@ class SegmentStore:
     def segment_path(self, meta: SegmentMeta) -> str:
         return os.path.join(self.root, meta.file)
 
-    def read_segment(self, meta: SegmentMeta) -> np.ndarray:
-        """Load + verify one segment's packed words."""
-        arrays, fmeta = fmt.read_array_file(self.segment_path(meta))
+    def read_segment(self, meta: SegmentMeta, *,
+                     retries: int = 2) -> np.ndarray:
+        """Load + verify one segment's packed words.  Transient I/O
+        errors (EIO blips — real or injected) retry up to ``retries``
+        times with a short linear backoff; validation failures
+        (:class:`~repro.store.format.CorruptFileError`) never retry —
+        corruption is persistent until repaired, and the caller's move
+        is :meth:`quarantine` + :meth:`scrub`, not another read."""
+        attempt = 0
+        while True:
+            try:
+                arrays, fmeta = fmt.read_array_file(self.segment_path(meta))
+                break
+            except fmt.CorruptFileError:
+                raise
+            except OSError:
+                attempt += 1
+                if attempt > retries:
+                    raise
+                with self._lock:
+                    self.read_retries += 1
+                time.sleep(0.001 * attempt)
         packed = arrays["packed"]
         if (fmeta.get("num_records") != meta.num_records
                 or fmeta.get("segment_id") != meta.segment_id
@@ -271,6 +318,103 @@ class SegmentStore:
                 f"{meta.file}: segment meta mismatch (manifest says "
                 f"{meta}, file says {fmeta} / {packed.shape})")
         return packed
+
+    # ------------------------------------------------------- quarantine/scrub
+    @property
+    def quarantined(self) -> dict[str, str]:
+        """Snapshot of quarantined segment files -> reason."""
+        with self._lock:
+            return dict(self._quarantined)
+
+    def quarantine(self, meta: SegmentMeta, reason: str) -> None:
+        """Mark a live segment as corrupt-on-disk: compaction will not
+        merge it and the serving layer serves around it until
+        :meth:`repair_segment` (or a clean :meth:`scrub` re-read)
+        clears it.  Idempotent per file."""
+        with self._lock:
+            if meta.file not in {s.file for s in self._manifest.segments}:
+                return                 # superseded while we looked at it
+            if meta.file not in self._quarantined:
+                self._quarantined[meta.file] = str(reason)
+                self.quarantine_events += 1
+
+    def repair_segment(self, meta: SegmentMeta, packed: np.ndarray) -> None:
+        """Rewrite a (quarantined) segment's file from a known-good
+        replica of its packed words — e.g. re-extracted from the live
+        in-memory index — then verify the round trip and lift the
+        quarantine.  Runs under the flush lock so no compaction merge or
+        two-phase flush can move the manifest mid-repair."""
+        packed = np.ascontiguousarray(packed, dtype=np.uint32)
+        want = (meta.num_keys, _num_words(meta.num_records))
+        if packed.shape != want:
+            raise ValueError(f"replica shape {packed.shape} does not match "
+                             f"segment {meta.file} ({want})")
+        with self._flush_lock:
+            with self._lock:
+                if meta.file not in {s.file
+                                     for s in self._manifest.segments}:
+                    raise ValueError(f"{meta.file} is not a live segment")
+                # gc guard for the .tmp twin during the atomic rewrite
+                self._inflight.add(meta.file)
+            try:
+                fmt.write_array_file(
+                    self.segment_path(meta), {"packed": packed},
+                    meta={"segment_id": meta.segment_id,
+                          "start_record": meta.start_record,
+                          "num_records": meta.num_records})
+            finally:
+                with self._lock:
+                    self._inflight.discard(meta.file)
+        self.read_segment(meta)        # verify before lifting quarantine
+        with self._lock:
+            self._quarantined.pop(meta.file, None)
+            self.repairs += 1          # every successful rewrite counts
+
+    def scrub(self, *,
+              repair: Callable[[SegmentMeta], np.ndarray | None] | None
+              = None,
+              dry_run: bool = False) -> ScrubStats:
+        """CRC-verify every committed segment (the background scrubber's
+        body).  A segment that fails validation is repaired from
+        ``repair(meta)``'s replica when one is available, otherwise
+        quarantined; a quarantined segment whose re-read comes back
+        clean (the corruption was read-side, not on disk) is released.
+        In-flight segments are skipped — their writer owns them.
+        ``dry_run=True`` only reports."""
+        checked = 0
+        corrupt: list[str] = []
+        repaired: list[str] = []
+        quarantined: list[str] = []
+        for meta in self._manifest.segments:      # immutable snapshot
+            with self._lock:
+                if meta.file in self._inflight:
+                    continue
+            checked += 1
+            try:
+                self.read_segment(meta)
+            except (fmt.CorruptFileError, OSError) as e:
+                corrupt.append(meta.file)
+                if dry_run:
+                    continue
+                replica = repair(meta) if repair is not None else None
+                if replica is not None:
+                    try:
+                        self.repair_segment(meta, replica)
+                        repaired.append(meta.file)
+                        continue
+                    except (ValueError, OSError, fmt.CorruptFileError):
+                        pass           # fall through to quarantine
+                self.quarantine(meta, f"{type(e).__name__}: {e}")
+                quarantined.append(meta.file)
+            else:
+                if dry_run:
+                    continue
+                with self._lock:       # clean read-back lifts quarantine
+                    if self._quarantined.pop(meta.file, None) is not None:
+                        self.repairs += 1
+                        repaired.append(meta.file)
+        return ScrubStats(checked, tuple(corrupt), tuple(repaired),
+                          tuple(quarantined), dry_run)
 
     def write_segment(self, packed: np.ndarray, num_records: int,
                       start_record: int, *,
@@ -511,11 +655,19 @@ class SegmentStore:
 
     def _find_run(self, segs: Sequence[SegmentMeta]
                   ) -> tuple[int, int] | None:
+        # a quarantined segment's bits are unreadable until repaired —
+        # it can never join a merge run, and it breaks runs that would
+        # otherwise span it (compaction serves around corruption)
+        with self._lock:
+            bad = set(self._quarantined)
         i = 0
         while i < len(segs):
+            if segs[i].file in bad:
+                i += 1
+                continue
             j = i
             t = self._tier(segs[i].num_records)
-            while (j < len(segs)
+            while (j < len(segs) and segs[j].file not in bad
                    and self._tier(segs[j].num_records) == t):
                 j += 1
             if j - i >= self.compact_fanout:
@@ -622,6 +774,16 @@ class SegmentStore:
                         pass            # someone else collected it
                 removed.append(name)
         return GCStats(tuple(removed), reclaimed, tuple(skipped), dry_run)
+
+    def health(self) -> dict:
+        """Durability-side health snapshot (folded into
+        ``BitmapService.health()``)."""
+        with self._lock:
+            return {"quarantined": dict(self._quarantined),
+                    "quarantine_events": self.quarantine_events,
+                    "repairs": self.repairs,
+                    "read_retries": self.read_retries,
+                    "segments": len(self._manifest.segments)}
 
     def close(self) -> None:
         with self._lock:

@@ -20,6 +20,7 @@ import os
 
 import numpy as np
 
+from repro.fault import seam
 from repro.store import format as fmt
 
 
@@ -67,13 +68,31 @@ class WriteAheadLog:
         """Durably log a record block whose first record has absolute
         offset ``start`` in the stream.  ``tick`` optionally stamps the
         workload tick that produced the block (the replay-idempotence
-        watermark — see ``MulticoreRuntime.run_tick(tick_id=)``)."""
+        watermark — see ``MulticoreRuntime.run_tick(tick_id=)``).
+
+        On ANY append failure (full disk, torn frame, failed fsync) the
+        handle rewinds to the last intact frame boundary before the
+        error propagates: the failed entry is not durable and the caller
+        knows it, but the NEXT append lands reachable — without the
+        rewind, bytes written after a torn frame would be silently lost
+        to every reader even though their appends "succeeded"."""
         records = np.ascontiguousarray(records)
+        seam.fire("wal.append", path=self.path, start=int(start),
+                  size=records.nbytes)
         meta = {"start": int(start), "dtype": str(records.dtype),
                 "shape": list(records.shape)}
         if tick is not None:
             meta["tick"] = int(tick)
-        fmt.append_log_entry(self._f, meta, records.tobytes())
+        pos = self._f.tell()
+        try:
+            fmt.append_log_entry(self._f, meta, records.tobytes())
+        except BaseException:
+            try:
+                self._f.truncate(pos)
+                self._f.seek(pos)
+            except OSError:
+                pass            # reopen-time truncation still covers it
+            raise
 
     def close(self) -> None:
         self._f.close()

@@ -1,0 +1,491 @@
+"""Chaos harness: seeded fault schedules against the full
+ingest + serve + maintenance stack.
+
+The fabric (:mod:`repro.fault`) injects torn writes, dropped fsyncs,
+ENOSPC, EIO, read-side bit rot, and transient dispatch/task errors
+through the seams the store and serving layers carry; these tests assert
+the system's survival contract:
+
+  * **bit-identical results** — a workload run under a seeded fault
+    schedule returns exactly the clean run's bits (retries, fallback
+    backends, and repairs are invisible in the data);
+  * **zero acknowledged-write loss** — an append that returned is
+    recoverable across any injected crash instant (kill the maintenance
+    worker, drop the session, reopen from disk);
+  * **corruption is survived, not served** — a CRC-failing segment is
+    quarantined, repaired from the live in-memory replica, and no
+    in-flight query ever sees a wrong bit.
+"""
+import os
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.db import BitmapDB
+from repro.db.session import open_db
+from repro.engine import planner
+from repro.fault import FaultInjector, FaultPlan, FaultSpec, InjectedFault
+from repro.serve.resilience import CircuitBreaker, RetryPolicy, is_transient
+from repro.serve.service import DeadlineExceeded, ServiceOverloaded
+from repro.store import SegmentStore
+from repro.store import format as fmt
+
+key = planner.key
+
+M = 12                    # key rows
+BLOCK = 96                # records per appended block
+WORDS = 3                 # key words per record
+APPEND_RETRIES = 12       # harness-level: an append that fails is retried;
+                          # only a RETURNED append counts as acknowledged
+
+
+def _blocks(seed, n_blocks=8):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, M, (BLOCK, WORDS), dtype=np.int32)
+            for _ in range(n_blocks)]
+
+
+def _append_acked(db, block):
+    """Append with harness-level retries; returns True iff acknowledged.
+    A failed attempt must leave the index exactly where it was (the WAL
+    logs before the in-memory splice) — asserted here on every retry."""
+    before = db.num_records
+    for _ in range(APPEND_RETRIES):
+        try:
+            db.append_encoded(block)
+            return True
+        except OSError:
+            assert db.num_records == before, \
+                "failed append mutated the index"
+    return False
+
+
+def _run_workload(root, plan, *, data_seed=7):
+    """Ingest + serve + maintenance under an (optional) fault schedule.
+    Returns (per-block count matrix, final counts, injector-or-None)."""
+    db = BitmapDB(num_keys=M, path=root, spill_records=256)
+    svc = db.serve(background=True, max_delay_ms=1.0, wave_retries=3,
+                   breaker_cooldown_s=0.05, idle_after_ms=50.0)
+    inj = FaultInjector(plan).install() if plan is not None else None
+    try:
+        waves = []
+        for block in _blocks(data_seed):
+            assert _append_acked(db, block)
+            futs = [svc.submit(key(i)) for i in range(M)]
+            waves.append([f.count for f in futs])
+        # a concurrent storm over the settled index: per-caller ordering
+        # and identical bits regardless of how waves coalesce
+        storm_counts = [None] * 4
+
+        def caller(slot):
+            futs = [svc.submit(key(i)) for i in range(M)]
+            seqs = [f.resolve_seq for f in futs]
+            assert seqs == sorted(seqs), "futures resolved out of order"
+            storm_counts[slot] = [f.count for f in futs]
+
+        threads = [threading.Thread(target=caller, args=(s,))
+                   for s in range(4)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for got in storm_counts:
+            assert got == waves[-1]
+    finally:
+        if inj is not None:
+            inj.uninstall()
+    assert svc._maint_ex.flush(30)
+    health = svc.health()
+    svc.close()
+    return waves, health, inj
+
+
+@pytest.mark.parametrize("fault_seed", [11, 23, 47])
+def test_chaos_bit_identical_under_faults(tmp_path, fault_seed):
+    """A seeded randomized fault schedule (every kind, every site) does
+    not change a single served bit, and the recovered on-disk state is
+    bit-identical to the clean run's."""
+    clean_root = str(tmp_path / "clean")
+    chaos_root = str(tmp_path / "chaos")
+    plan = FaultPlan.random(fault_seed, profile="all")
+
+    clean_waves, _, _ = _run_workload(clean_root, None)
+    chaos_waves, health, inj = _run_workload(chaos_root, plan)
+
+    assert chaos_waves == clean_waves, \
+        f"fault schedule changed served bits: {inj.report_json()}"
+
+    # recovered state: segment/WAL split may differ (fault-delayed
+    # spills leave a longer WAL tail) but segments + replay must
+    # reconstruct the identical record stream
+    a = open_db(clean_root, num_keys=M)
+    b = open_db(chaos_root, num_keys=M)
+    try:
+        assert a.num_records == b.num_records
+        ra = a.query_many([key(i) for i in range(M)])
+        rb = b.query_many([key(i) for i in range(M)])
+        for i in range(M):
+            assert ra[i].count == rb[i].count
+            np.testing.assert_array_equal(np.asarray(ra[i].rows),
+                                          np.asarray(rb[i].rows))
+    finally:
+        a.store.close()
+        b.store.close()
+    # nothing left degraded once the schedule drained
+    assert health["store"]["quarantined"] == {}
+
+
+@pytest.mark.parametrize("fault_seed", [5, 31])
+def test_chaos_crash_instant_no_acked_loss(tmp_path, fault_seed):
+    """Kill the maintenance worker mid-schedule, drop the session cold
+    (no close, no flush), reopen from disk: every acknowledged append is
+    there, bit for bit; every unacknowledged one is not."""
+    root = str(tmp_path / "store")
+    plan = FaultPlan.random(fault_seed, profile="storage", n_faults=8)
+    db = BitmapDB(num_keys=M, path=root, spill_records=256)
+    svc = db.serve(background=True, max_delay_ms=1.0)
+
+    acked = []
+    with FaultInjector(plan):
+        for bi, block in enumerate(_blocks(fault_seed, n_blocks=6)):
+            if _append_acked(db, block):
+                acked.append(block)
+            if bi == 3:                 # crash instant: mid-ingest
+                break
+        svc._maint_ex.kill()            # maintenance dies with the process
+    # the session is dropped WITHOUT close(): no final spill, no WAL
+    # close — recovery has only what was durable at the crash instant
+    del svc, db
+
+    db2 = open_db(root, num_keys=M)
+    try:
+        want = (np.concatenate(acked, axis=0) if acked
+                else np.zeros((0, WORDS), np.int32))
+        assert db2.num_records == want.shape[0], \
+            "acknowledged appends lost (or phantom records recovered)"
+        # content check: recovered counts == counts of a fresh index
+        # built from exactly the acknowledged blocks
+        ref = BitmapDB(num_keys=M)
+        if want.shape[0]:
+            ref.append_encoded(want)
+        for i in range(M):
+            assert db2.query(key(i)).count == ref.query(key(i)).count
+    finally:
+        db2.store.close()
+
+
+def test_chaos_crc_quarantine_repair_in_flight(tmp_path):
+    """Persistent on-disk corruption: the segment is quarantined and
+    repaired from the in-memory replica by the standby scrubber while
+    queries keep serving correct bits throughout; health tells the
+    story."""
+    root = str(tmp_path / "store")
+    db = BitmapDB(num_keys=M, path=root, spill_records=256)
+    svc = db.serve(background=True, max_delay_ms=1.0, idle_after_ms=5000.0)
+    for block in _blocks(3, n_blocks=6):
+        db.append_encoded(block)
+    assert svc._maint_ex.flush(30)
+    assert len(db.store.segments) >= 1
+
+    clean = [svc.submit(key(i)).count for i in range(M)]
+    meta = db.store.segments[0]
+    path = db.store.segment_path(meta)
+    raw = bytearray(open(path, "rb").read())
+    raw[-4] ^= 0x08                      # rot one payload bit on disk
+    open(path, "wb").write(bytes(raw))
+    with pytest.raises(fmt.CorruptFileError):
+        db.store.read_segment(meta)
+
+    # quarantine first (dry of a replica), queries keep serving
+    db.store.quarantine(meta, "test rot")
+    assert db.store.quarantined == {meta.file: "test rot"}
+    assert svc.health()["degraded"]
+    mid = [svc.submit(key(i)).count for i in range(M)]
+    assert mid == clean, "in-flight queries saw quarantined corruption"
+
+    # standby entry schedules the scrub; the live index is the replica
+    svc.standby()
+    assert svc._maint_ex.flush(30)
+    h = svc.health()
+    assert h["store"]["quarantined"] == {}
+    assert h["store"]["repairs"] >= 1
+    assert not h["degraded"]
+    db.store.read_segment(meta)          # the file itself is healed
+    post = [svc.submit(key(i)).count for i in range(M)]
+    assert post == clean
+    svc.close()
+
+
+def test_enospc_mid_prepare_clean_abort(tmp_path):
+    """Satellite: ENOSPC inside ``prepare_segment`` aborts cleanly —
+    flush lock released, no orphan ``.tmp`` that ``gc()`` misses, and
+    the very next spill succeeds."""
+    root = str(tmp_path / "store")
+    store = SegmentStore(root, auto_compact=False)
+    rng = np.random.default_rng(0)
+    packed = rng.integers(0, 2**32, (M, 2), dtype=np.uint32)
+
+    plan = FaultPlan((FaultSpec("format.write", "enospc",
+                                path_substr="seg-"),))
+    with FaultInjector(plan) as inj:
+        with pytest.raises(OSError):
+            store.write_segment(packed, 64, 0)
+        assert inj.fired("format.write")
+    assert store.segments == ()
+    # ENOSPC fires before any byte lands: nothing for gc, nothing stray
+    assert not [f for f in os.listdir(root) if f.endswith(".tmp")]
+    assert not store.gc()   # GCStats is falsy when nothing was removed
+
+    # flush lock must be free: the next spill goes through immediately
+    meta = store.write_segment(packed, 64, 0)
+    assert store.durable_records == 64
+    np.testing.assert_array_equal(store.read_segment(meta), packed)
+    store.close()
+
+
+def test_torn_segment_write_debris_collected(tmp_path):
+    """Satellite: a TORN segment write (crash mid-write) leaves exactly
+    one ``.tmp`` debris file; it is invisible under the final name,
+    ``gc()`` collects it, and the next spill succeeds."""
+    root = str(tmp_path / "store")
+    store = SegmentStore(root, auto_compact=False)
+    rng = np.random.default_rng(1)
+    packed = rng.integers(0, 2**32, (M, 2), dtype=np.uint32)
+
+    plan = FaultPlan((FaultSpec("format.write", "torn",
+                                path_substr="seg-", torn_frac=0.4),))
+    with FaultInjector(plan):
+        with pytest.raises(OSError):
+            store.write_segment(packed, 64, 0)
+    debris = [f for f in os.listdir(root) if f.endswith(".tmp")]
+    assert len(debris) == 1 and debris[0].startswith("seg-")
+    removed = store.gc()
+    assert debris[0] in removed
+    assert not [f for f in os.listdir(root) if f.endswith(".tmp")]
+
+    meta = store.write_segment(packed, 64, 0)
+    np.testing.assert_array_equal(store.read_segment(meta), packed)
+    store.close()
+
+
+def test_enospc_mid_commit_manifest_swap(tmp_path):
+    """Satellite: ENOSPC during the COMMIT's manifest write fails the
+    two-phase op without losing the manifest, the WAL, or the lock; the
+    orphan segment file becomes ordinary gc fodder and the next spill
+    succeeds."""
+    root = str(tmp_path / "store")
+    store = SegmentStore(root, auto_compact=False)
+    rng = np.random.default_rng(2)
+    packed = rng.integers(0, 2**32, (M, 2), dtype=np.uint32)
+    store.log_block(rng.integers(0, M, (64, WORDS), dtype=np.int32), 0)
+
+    plan = FaultPlan((FaultSpec("format.write", "enospc",
+                                path_substr="MANIFEST"),))
+    with FaultInjector(plan):
+        with pytest.raises(OSError):
+            store.write_segment(packed, 64, 0)
+    assert store.segments == ()          # swap never happened
+    orphans = [f for f in os.listdir(root) if f.startswith("seg-")]
+    assert orphans                       # prepared file is an orphan now
+    assert orphans[0] in store.gc()
+
+    meta = store.write_segment(packed, 64, 0)
+    assert store.durable_records == 64
+    assert meta.file not in store.gc()   # live segments are never garbage
+    store.close()
+
+
+def test_wal_append_enospc_not_acknowledged(tmp_path):
+    """An ENOSPC'd WAL append is NOT acknowledged and NOT recovered —
+    but the appends around it all are (the handle rewinds past nothing)."""
+    root = str(tmp_path / "store")
+    db = BitmapDB(num_keys=M, path=root, spill_records=None)
+    b1, b2, b3 = _blocks(9, n_blocks=3)
+    db.append_encoded(b1)
+    plan = FaultPlan((FaultSpec("log.append", "enospc",
+                                path_substr="wal-"),))
+    with FaultInjector(plan):
+        with pytest.raises(OSError):
+            db.append_encoded(b2)
+    assert db.num_records == BLOCK       # b2 not acked, not spliced
+    db.append_encoded(b3)
+    db.store.close()
+
+    db2 = open_db(root, num_keys=M)
+    try:
+        assert db2.num_records == 2 * BLOCK
+        ref = BitmapDB(num_keys=M)
+        ref.append_encoded(np.concatenate([b1, b3], axis=0))
+        for i in range(M):
+            assert db2.query(key(i)).count == ref.query(key(i)).count
+    finally:
+        db2.store.close()
+
+
+def test_breaker_trips_falls_back_recovers():
+    """Dispatch faults on the preferred backend: retried, then confirmed
+    against the fallback, breaker trips, degraded waves serve identical
+    bits, cooldown probe closes it again."""
+    db = BitmapDB(num_keys=M, backend="bulk")
+    rng = np.random.default_rng(4)
+    db.append_encoded(rng.integers(0, M, (300, WORDS), dtype=np.int32))
+    svc = db.serve(background=True, max_delay_ms=1.0, wave_retries=1,
+                   breaker_threshold=2, breaker_cooldown_s=0.05)
+    qs = [key(i) for i in range(M)]
+    clean = [svc.submit(q).count for q in qs]
+
+    plan = FaultPlan(tuple(
+        FaultSpec("engine.dispatch", "dispatch_error", occurrence=i,
+                  match=(("backend", "bulk"),)) for i in range(1, 60)))
+    with FaultInjector(plan):
+        degraded = [svc.submit(q).count for q in qs]
+        h = svc.health()
+        assert degraded == clean, "fallback wave changed bits"
+        assert h["breaker"]["trips"] >= 1
+        assert h["degraded_waves"] >= 1 and h["wave_retries"] >= 1
+        assert h["degraded"]
+
+    time.sleep(0.1)                      # past the cooldown
+    post = [svc.submit(q).count for q in qs]
+    assert post == clean
+    h = svc.health()
+    assert h["breaker"]["state"] == "closed" and not h["degraded"]
+    m = svc.metrics()
+    assert m.health["breaker"]["trips"] == h["breaker"]["trips"]
+    svc.close()
+
+
+def test_deadline_budget_rejects_late_queries():
+    db = BitmapDB(num_keys=M)
+    rng = np.random.default_rng(5)
+    db.append_encoded(rng.integers(0, M, (100, WORDS), dtype=np.int32))
+    svc = db.serve(background=False)     # one-shot: we control dispatch
+    doomed = svc.submit(key(0), deadline_ms=0.01)
+    fine = svc.submit(key(1))
+    time.sleep(0.005)
+    svc.drain()
+    with pytest.raises(DeadlineExceeded):
+        doomed.result()
+    assert doomed.resolve_seq >= 0       # sequenced with the wave
+    assert fine.count >= 0               # wave-mates are untouched
+    assert svc.health()["deadline_rejected"] == 1
+    svc.close()
+
+
+def test_overload_error_carries_admission_fields():
+    db = BitmapDB(num_keys=M)
+    db.append_encoded(np.zeros((32, WORDS), np.int32))
+    svc = db.serve(background=True, max_queue=1, admission="reject",
+                   max_delay_ms=500.0)
+    try:
+        with pytest.raises(ServiceOverloaded) as ei:
+            for _ in range(200):
+                svc.submit(key(0))
+        e = ei.value
+        assert e.limit == 1 and e.admission == "reject"
+        assert e.queue_depth >= 1
+        assert "limit=1" in str(e) and "admission='reject'" in str(e)
+    finally:
+        svc.close()
+
+
+def test_maintenance_failure_accounting_in_metrics(tmp_path):
+    """Satellite: per-task failure counts + last exception flow from the
+    executor through ``service.metrics()``."""
+    root = str(tmp_path / "store")
+    db = BitmapDB(num_keys=M, path=root, spill_records=256)
+    svc = db.serve(background=True, idle_after_ms=5000.0)
+    db.append_encoded(_blocks(6, n_blocks=1)[0])
+
+    plan = FaultPlan((FaultSpec("maintenance.task", "task_error",
+                                count=10, match=(("kind", "gc"),)),))
+    with FaultInjector(plan):
+        svc._maint.schedule_gc()
+        assert svc._maint_ex.flush(30)
+    st = svc._maint_ex.stats()
+    assert st["failures"]["gc"] == 1     # retried, then finally failed
+    assert st["retries"]["gc"] >= 1
+    assert "InjectedFault" in st["last_failure"]["gc"]
+    assert isinstance(st["errors"], int)
+
+    m = svc.metrics()
+    assert m.maintenance["failures"]["gc"] == 1
+    assert m.health["maintenance_failures"]["failures"]["gc"] == 1
+    # transient blips do NOT land in failures
+    plan = FaultPlan((FaultSpec("maintenance.task", "task_error",
+                                match=(("kind", "compact"),)),))
+    with FaultInjector(plan):
+        svc._maint.schedule_compact()
+        assert svc._maint_ex.flush(30)
+    st = svc._maint_ex.stats()
+    assert st["failures"].get("compact", 0) == 0
+    assert st["retries"]["compact"] >= 1
+    svc.close()
+
+
+# --------------------------------------------------------- fabric unit tests
+def test_fault_plan_seeded_and_serializable():
+    p1 = FaultPlan.random(99)
+    p2 = FaultPlan.random(99)
+    p3 = FaultPlan.random(100)
+    assert p1 == p2 and p1 != p3
+    assert FaultPlan.from_json(p1.to_json()) == p1
+
+
+def test_injector_occurrence_determinism(tmp_path):
+    """Same plan + same call sequence = same fired events (the schedule
+    is a function of the seed, not the wall clock)."""
+    plan = FaultPlan((FaultSpec("format.write", "enospc", occurrence=2),))
+
+    def run():
+        inj = FaultInjector(plan)
+        with inj:
+            for i in range(4):
+                try:
+                    fmt.write_bytes_atomic(
+                        str(tmp_path / f"f{i}"), b"x" * 64)
+                except OSError:
+                    pass
+        return [(e["site"], e["kind"], e["occurrence"])
+                for e in inj.events]
+
+    assert run() == run() == [("format.write", "enospc", 2)]
+
+
+def test_retry_policy_deterministic_jitter():
+    p = RetryPolicy(max_attempts=4, base_delay_s=0.01, jitter=0.5)
+    assert list(p.delays(3)) == list(p.delays(3))
+    assert list(p.delays(3)) != list(p.delays(4))
+    calls = []
+    with pytest.raises(InjectedFault):
+        p.call(lambda: (_ for _ in ()).throw(InjectedFault("x")),
+               seed=1, retryable=is_transient,
+               on_retry=lambda a, e: calls.append(a),
+               sleep=lambda s: None)
+    assert calls == [1, 2, 3]            # 1 try + 3 retries, then raise
+
+
+def test_circuit_breaker_state_machine():
+    t = [0.0]
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=1.0,
+                        clock=lambda: t[0])
+    assert br.state == "closed" and br.allow()
+    br.record_failure()
+    assert br.state == "closed"          # below threshold
+    br.record_failure()
+    assert br.state == "open" and br.trips == 1
+    assert not br.allow()                # cooling down
+    t[0] = 1.5
+    assert br.allow()                    # THE probe slot
+    assert br.state == "half-open"
+    assert not br.allow()                # only one probe
+    br.record_failure()                  # probe failed -> re-open
+    assert br.state == "open" and br.trips == 2
+    t[0] = 3.0
+    assert br.allow()
+    br.record_success()                  # probe succeeded -> closed
+    assert br.state == "closed" and br.allow()
+    snap = br.snapshot()
+    assert snap["trips"] == 2 and snap["failures"] == 3

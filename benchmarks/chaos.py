@@ -87,13 +87,28 @@ def run_seed(seed: int) -> list[str]:
     artifacts for this seed."""
     from repro.fault import FaultPlan
 
+    from repro.obs import export as obs_export
+    from repro.obs import trace as obs_trace
+
     plan = FaultPlan.random(seed, profile="all")
     with tempfile.TemporaryDirectory() as tmp:
         clean_waves, _, _ = _run(os.path.join(tmp, "clean"), None)
-        chaos_waves, health, inj = _run(os.path.join(tmp, "chaos"), plan)
+        # trace the faulted run: every fired fault lands as a
+        # zero-duration fault.<kind> event inside whatever span it
+        # interrupted, so the merged JSONL artifact shows WHERE in the
+        # serve/maintenance/store chain each injection hit
+        tracer = obs_trace.Tracer(capacity=1 << 18)
+        obs_trace.install(tracer)
+        try:
+            chaos_waves, health, inj = _run(os.path.join(tmp, "chaos"),
+                                            plan)
+        finally:
+            obs_trace.uninstall(tracer)
         n_a, counts_a = _reopened_counts(os.path.join(tmp, "clean"))
         n_b, counts_b = _reopened_counts(os.path.join(tmp, "chaos"))
 
+    obs_export.write_jsonl(
+        tracer.spans(), os.path.join(OUT_DIR, f"seed{seed}.trace.jsonl"))
     with open(os.path.join(OUT_DIR, f"seed{seed}.faults.json"), "w") as f:
         f.write(inj.report_json())
     with open(os.path.join(OUT_DIR, f"seed{seed}.health.json"), "w") as f:

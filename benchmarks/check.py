@@ -17,7 +17,8 @@ REQUIRED = ("engine_planner_query_batched", "engine_streaming_append",
 EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact_recover", "bitexact",
                    "allclose", "facade_overhead_ok", "microbatch_ok",
                    "bulk_bw_ok", "bulk_not_slower_ok", "auto_ok",
-                   "degraded_p99_ok")
+                   "degraded_p99_ok", "trace_overhead_ok",
+                   "energy_reconciled")
 
 
 def main(path: str = "BENCH_engine.json") -> int:

@@ -44,6 +44,7 @@ import numpy as np
 from repro.db import expr as expr_mod
 from repro.db.result import LazyBatch, Result, ResultBatch
 from repro.db.schema import Schema
+from repro.obs import metrics as obs_metrics
 from repro.engine import (backends, batch as engine_batch, costmodel,
                           planner, policy)
 from repro.engine.runtime import StreamingIndexer
@@ -102,8 +103,14 @@ class BitmapDB:
         self._counts = np.zeros((m,), np.int64)
         self._plans: dict = {}
         self._plans_by_id: dict = {}       # id(expr) fast path (see _plan_for)
-        self._cache_counters = {"id_hits": 0, "value_hits": 0, "misses": 0,
-                                "id_evictions": 0, "value_evictions": 0}
+        # typed counters in a per-session registry; cache_stats() is a
+        # view over these (services attach the registry as their "db"
+        # subtree for one exportable metric tree)
+        self.registry = obs_metrics.Registry()
+        self._cache_counters = {
+            k: self.registry.counter(f"plan_cache_{k}_total")
+            for k in ("id_hits", "value_hits", "misses",
+                      "id_evictions", "value_evictions")}
         self._stats_cache: tuple[int, planner.KeyStats] | None = None
         self._view_cache = None            # (buf, n, BitmapIndex) snapshot
         if path is None:
@@ -301,14 +308,14 @@ class BitmapDB:
         c = self._cache_counters
         hit = self._plans_by_id.get(id(q))
         if hit is not None:
-            c["id_hits"] += 1
+            c["id_hits"].inc()
             return hit[1]
         if isinstance(q, (planner.QueryPlan, planner.FactoredPlan,
                           planner.CompositePlan)):
             return q
         pl = self._plans.get(q)
         if pl is None:
-            c["misses"] += 1
+            c["misses"].inc()
             pred = expr_mod.lower(q, self.schema)
             planner.check_key_range(planner.key_indices(pred),
                                     self.num_keys)
@@ -318,13 +325,13 @@ class BitmapDB:
             stats = self.stats if self._counts is not None else None
             pl = planner.plan(pred, stats=stats)
             if len(self._plans) >= self._VALUE_CACHE_LIMIT:
-                c["value_evictions"] += len(self._plans)
+                c["value_evictions"].add(len(self._plans))
                 self._plans.clear()
             self._plans[q] = pl
         else:
-            c["value_hits"] += 1
+            c["value_hits"].inc()
         if len(self._plans_by_id) >= self._ID_CACHE_LIMIT:
-            c["id_evictions"] += len(self._plans_by_id)
+            c["id_evictions"].add(len(self._plans_by_id))
             self._plans_by_id.clear()
         self._plans_by_id[id(q)] = (q, pl)
         return pl
@@ -334,9 +341,10 @@ class BitmapDB:
         counters plus the live sizes of the identity-keyed and
         value-keyed caches (both bounded at 64k entries, dropped
         wholesale at the limit)."""
-        return dict(self._cache_counters,
-                    id_size=len(self._plans_by_id),
-                    value_size=len(self._plans))
+        out = {k: c.value for k, c in self._cache_counters.items()}
+        out["id_size"] = len(self._plans_by_id)
+        out["value_size"] = len(self._plans)
+        return out
 
     def replan(self) -> None:
         """Drop the per-expression plan cache so future queries re-order
@@ -472,7 +480,7 @@ class BitmapDB:
             else:
                 append(plan_for(q))
         if fast_hits:
-            self._cache_counters["id_hits"] += fast_hits
+            self._cache_counters["id_hits"].add(fast_hits)
         view = self._view()
         batch_run = LazyBatch(
             lambda: self._execute(plans, view, pad_output, backend))

@@ -51,6 +51,21 @@ import numpy as np
 
 from repro.engine import backends, costmodel, planner, policy
 from repro.fault import seam as _fault_seam
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+
+# compile observability: waves / bucket dispatches / executor builds in
+# the process-wide registry (the jit caches below are process-global).
+# builds == lru_cache misses == retraces; hits are dispatches - builds.
+_WAVES = _obs_metrics.GLOBAL.counter(
+    "engine_waves_total", "batched _serve invocations")
+_QUERIES = _obs_metrics.GLOBAL.counter(
+    "engine_queries_total", "queries served through batched waves")
+_DISPATCHES = _obs_metrics.GLOBAL.counter(
+    "engine_bucket_dispatches_total", "bucket executor calls")
+_BUILDS = _obs_metrics.GLOBAL.counter(
+    "engine_executor_builds_total",
+    "bucket executors jit-built (cache misses = retraces)")
 
 #: One pass: (literals tuple[(key, inverted)], post_invert).  Program:
 #: tuple of groups, each a tuple of passes.
@@ -133,6 +148,7 @@ def _executor(backend_name: str, g: int, p: int, l: int):
     Keyed by backend NAME: executors for different backends coexist in
     the cache, so a cost-model backend switch mid-traffic lands on an
     already-compiled executor instead of stalling a wave."""
+    _BUILDS.inc()                      # body runs only on a cache miss
     return jax.jit(_body_for(backends.get_backend(backend_name), g, p))
 
 
@@ -143,6 +159,7 @@ def _stacked_executor(backend_name: str, g: int, p: int, l: int):
     ``num_records`` (S,), with the selector arrays broadcast — every live
     segment of a uniform-word-count chain serves the whole bucket in ONE
     dispatch instead of one dispatch per segment."""
+    _BUILDS.inc()
     body = _body_for(backends.get_backend(backend_name), g, p)
     return jax.jit(jax.vmap(body, in_axes=(0, 0, None, None, None)))
 
@@ -287,6 +304,9 @@ def _serve(packed: jax.Array, num_records: int, plans: Sequence,
     # fault seam: an injected dispatch error aborts the whole wave here,
     # exercising the service's retry -> backend-fallback -> isolation path
     _fault_seam.fire("engine.dispatch", backend=name, queries=len(plans))
+    _WAVES.inc()
+    _QUERIES.add(len(plans))
+    tracer = _obs_trace.TRACER
     m, nw = packed.shape
     buckets, zeros, composite = part
     q = len(plans)
@@ -303,7 +323,15 @@ def _serve(packed: jax.Array, num_records: int, plans: Sequence,
         aug = _augmented(packed)
         nrec = jnp.int32(num_records)
         for shape, idxs, sels, invs, post in buckets:
-            rws, cts = _executor(name, *shape)(aug, nrec, sels, invs, post)
+            _DISPATCHES.inc()
+            if tracer is None:
+                rws, cts = _executor(name, *shape)(aug, nrec, sels, invs,
+                                                   post)
+            else:
+                with tracer.span("bucket.dispatch", backend=name,
+                                 shape=shape, q=len(idxs)):
+                    rws, cts = _executor(name, *shape)(aug, nrec, sels,
+                                                       invs, post)
             if not pad_output and rws.shape[0] != len(idxs):
                 rws, cts = rws[:len(idxs)], cts[:len(idxs)]  # drop Q-pads
             pieces_r.append(rws)
@@ -389,6 +417,9 @@ def _serve_stacked(stack: jax.Array, nrecs: Sequence[int], plans: Sequence,
     vmapped dispatch per bucket covers every segment.  Returns
     (rows (S, Q, Nw), counts (S, Q)) in input query order."""
     _fault_seam.fire("engine.dispatch", backend=name, queries=len(plans))
+    _WAVES.inc()
+    _QUERIES.add(len(plans))
+    tracer = _obs_trace.TRACER
     s, m, nw = stack.shape
     buckets, zeros, composite = part
     q = len(plans)
@@ -401,8 +432,15 @@ def _serve_stacked(stack: jax.Array, nrecs: Sequence[int], plans: Sequence,
             axis=1)
         nrec = jnp.asarray(list(nrecs), jnp.int32)
         for shape, idxs, sels, invs, post in buckets:
-            rws, cts = _stacked_executor(name, *shape)(aug, nrec, sels,
-                                                       invs, post)
+            _DISPATCHES.inc()
+            if tracer is None:
+                rws, cts = _stacked_executor(name, *shape)(aug, nrec, sels,
+                                                           invs, post)
+            else:
+                with tracer.span("bucket.dispatch", backend=name,
+                                 shape=shape, q=len(idxs), segments=s):
+                    rws, cts = _stacked_executor(name, *shape)(
+                        aug, nrec, sels, invs, post)
             if rws.shape[1] != len(idxs):         # drop Q-pad rows
                 rws, cts = rws[:, :len(idxs)], cts[:, :len(idxs)]
             pieces_r.append(rws)

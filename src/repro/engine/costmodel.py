@@ -45,6 +45,15 @@ from typing import Iterable, Mapping, Sequence
 import jax
 
 from repro.engine import backends, planner
+from repro.obs import metrics as _obs_metrics
+
+# cost-model observability: calls vs computed = memo hit rate (the
+# decision memo is process-global, so its meters are too)
+_DECIDE_CALLS = _obs_metrics.GLOBAL.counter(
+    "costmodel_decide_calls_total", "auto-dispatch decisions requested")
+_DECIDE_COMPUTED = _obs_metrics.GLOBAL.counter(
+    "costmodel_decisions_computed_total",
+    "decisions actually derived (memo misses + uncacheable)")
 
 ENV_PATH = "REPRO_BITMAP_CALIBRATION"
 DEFAULT_PATH = os.path.join("results", "bitmap_calibration.json")
@@ -286,6 +295,7 @@ def decide(plans: Sequence, *, num_words: int, num_segments: int = 1,
     serving loop re-submitting the same plans pays one cache probe, not
     a re-derivation (a re-registered backend set or new calibration is
     part of the key, so neither ever serves a stale choice)."""
+    _DECIDE_CALLS.inc()
     cal = cal or get_calibration()
     try:
         return _decide_cached(tuple(plans), num_words, num_segments,
@@ -305,6 +315,7 @@ def _decide_cached(plans, num_words, num_segments, num_keys, stats, cal,
 
 def _decide_impl(plans, num_words, num_segments, num_keys, stats, cal,
                  allow_factor) -> Decision:
+    _DECIDE_COMPUTED.inc()
     cands = candidates(cal)
     shapes, composite, zeros = _bucket_shapes(plans)
     words_plain = _streamed_words(shapes, num_words)

@@ -60,6 +60,13 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.engine import backends, batch as engine_batch, policy
 from repro.core.bic import BICConfig, PaperConfig
 from repro.core.elastic import ElasticScheduler, EnergyReport, PowerState
+from repro.obs import metrics as _obs_metrics
+from repro.obs import trace as _obs_trace
+from repro.obs.energy import EnergyLedger
+
+_RECORDS_INDEXED = _obs_metrics.GLOBAL.counter(
+    "engine_records_indexed_total",
+    "records appended through streaming indexers")
 
 
 # ------------------------------------------------------------- sharded build
@@ -280,9 +287,10 @@ class StreamingIndexer:
         if snap is None:
             return
         tail, count, start, wm = snap
-        self._store.write_segment(
-            np.asarray(jax.device_get(tail)), count, start,
-            tick_watermark=wm)
+        with _obs_trace.maybe_span("spill", records=count):
+            self._store.write_segment(
+                np.asarray(jax.device_get(tail)), count, start,
+                tick_watermark=wm)
 
     # ------------------------------------------------- background spill
     def set_spill_hook(self, hook: Callable[[], None] | None) -> None:
@@ -313,8 +321,9 @@ class StreamingIndexer:
         if snap is None:
             return None
         tail, count, start, wm = snap
-        meta = self._store.prepare_segment(
-            np.asarray(jax.device_get(tail)), count, start)
+        with _obs_trace.maybe_span("spill.prepare", records=count):
+            meta = self._store.prepare_segment(
+                np.asarray(jax.device_get(tail)), count, start)
         return meta, wm
 
     def commit_spill(self, token) -> None:
@@ -323,7 +332,8 @@ class StreamingIndexer:
         carried into the fresh WAL generation by the store before the
         swap (see ``SegmentStore._commit``)."""
         meta, wm = token
-        self._store.commit_segment(meta, tick_watermark=wm)
+        with _obs_trace.maybe_span("spill.commit", file=meta.file):
+            self._store.commit_segment(meta, tick_watermark=wm)
 
     def abort_spill(self, token) -> None:
         """Abandon a prepared spill (its orphan file becomes gc fodder)."""
@@ -408,6 +418,7 @@ class StreamingIndexer:
                                 block)
             self._num_records += n_new
             self._stamp_tick(tick)
+        _RECORDS_INDEXED.add(n_new)
         self._maybe_spill()
         return self.index
 
@@ -439,6 +450,7 @@ class StreamingIndexer:
                                       jnp.int32(self._num_records),
                                       blocks, n_blk)
             self._num_records = total
+        _RECORDS_INDEXED.add(b * n_blk)
         self._maybe_spill()
         return self.index
 
@@ -523,6 +535,9 @@ class MulticoreRuntime:
         self.num_cores = dict(mesh.shape)[axis]
         self.scheduler = ElasticScheduler(self.num_cores, cfg, state)
         self.report = EnergyReport()
+        # joule ledger on the same operating points: tick reports feed
+        # it so ingest energy rolls up to pJ-per-indexed-bit
+        self.ledger = EnergyLedger(self.scheduler)
         self.calibrate_energy = calibrate_energy
         self.store_dir = store_dir
         self.flush_records = flush_records
@@ -596,6 +611,7 @@ class MulticoreRuntime:
         if wl == 0:
             tick = self.scheduler.account(0, tick_seconds)
             self.report.merge(tick)
+            self.ledger.charge_report(tick)
             return TickResult(None, 0, tick)
         t0 = time.perf_counter()
         out = multicore_create_index(records, keys, self.mesh, self.axis,
@@ -614,6 +630,9 @@ class MulticoreRuntime:
         else:
             tick = self.scheduler.account(wl, tick_seconds)
         self.report.merge(tick)
+        self.ledger.charge_report(tick)
+        # one indexed bit per (record, key) pair this tick produced
+        self.ledger.attribute_bits(wl * records.shape[1] * keys.shape[0])
         z = self.scheduler.cores_needed(wl, tick_seconds)
         if self.store_dir is not None:
             sis = self.core_indexers(keys)

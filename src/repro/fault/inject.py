@@ -51,6 +51,8 @@ import random
 import threading
 import time
 
+from repro.obs import trace as _obs_trace
+
 __all__ = ["FaultSpec", "FaultPlan", "FaultInjector", "InjectedFault",
            "InjectedOSError", "SITE_KINDS"]
 
@@ -238,6 +240,7 @@ class FaultInjector:
     # ------------------------------------------------------------ execution
     def _fire(self, site: str, ctx: dict):
         hit: FaultSpec | None = None
+        ev: dict | None = None
         with self._lock:
             for i, spec in enumerate(self.plan.specs):
                 if spec.site != site or not spec.matches(ctx):
@@ -246,13 +249,22 @@ class FaultInjector:
                 if hit is None and (spec.occurrence <= self._seen[i]
                                     < spec.occurrence + spec.count):
                     hit = spec
-                    self.events.append({
-                        "site": site, "kind": spec.kind,
-                        "occurrence": self._seen[i],
-                        "path": str(ctx.get("path", "")),
-                        "t": time.monotonic()})
+                    ev = {"site": site, "kind": spec.kind,
+                          "occurrence": self._seen[i],
+                          "path": str(ctx.get("path", "")),
+                          "t": time.monotonic()}
+                    self.events.append(ev)
         if hit is None:
             return None
+        # land the fired fault in the trace (outside the lock): a chaos
+        # run's span tree then shows exactly which operation each fault
+        # interrupted, and the event record carries the join keys back
+        tracer = _obs_trace.TRACER
+        if tracer is not None:
+            sp = tracer.event(f"fault.{hit.kind}", site=site,
+                              occurrence=ev["occurrence"], path=ev["path"])
+            ev["trace"] = sp.trace_id
+            ev["span"] = sp.parent_id       # the span the fault landed in
         return self._execute(hit, ctx)
 
     def _execute(self, spec: FaultSpec, ctx: dict):

@@ -45,6 +45,7 @@ from typing import Callable
 import numpy as np
 
 from repro.fault import seam
+from repro.obs import trace as obs_trace
 from repro.serve.resilience import RetryPolicy, is_transient
 
 __all__ = ["MaintenanceExecutor", "IndexMaintenance"]
@@ -90,7 +91,11 @@ class MaintenanceExecutor:
             if kind in self._pending:
                 return False
             self._pending.add(kind)
-            self._queue.append((kind, fn))
+            # capture the submitter's span context NOW: the worker's
+            # maintenance.<kind> span parents to the operation that
+            # scheduled the task (e.g. the wave whose append crossed the
+            # spill threshold), not to wherever the worker happens to be
+            self._queue.append((kind, fn, obs_trace.current_context()))
             self._cv.notify_all()
             return True
 
@@ -151,7 +156,7 @@ class MaintenanceExecutor:
                     self._cv.wait()
                 if not self._queue:
                     return                      # closed/killed and drained
-                kind, fn = self._queue.popleft()
+                kind, fn, ctx = self._queue.popleft()
                 self._pending.discard(kind)
                 self._running = kind
                 self._task_seq += 1
@@ -169,9 +174,11 @@ class MaintenanceExecutor:
                     self.retries[kind] += 1
 
             try:
-                info = self.retry_policy.call(
-                    body, seed=seed, retryable=is_transient,
-                    on_retry=on_retry)
+                with obs_trace.maybe_span(f"maintenance.{kind}",
+                                          parent=ctx):
+                    info = self.retry_policy.call(
+                        body, seed=seed, retryable=is_transient,
+                        on_retry=on_retry)
             except BaseException as e:          # noqa: BLE001 — logged
                 info = {"error": repr(e)}
                 with self._cv:

@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import itertools
 import threading
 import time
 from typing import Sequence
@@ -53,6 +54,9 @@ import numpy as np
 
 from repro.core.bic import BICConfig, PaperConfig
 from repro.core.elastic import ElasticScheduler, EnergyReport, PowerState
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.energy import EnergyLedger
 from repro.serve.resilience import CircuitBreaker, RetryPolicy, is_transient
 
 __all__ = ["BitmapService", "ServiceConfig", "ServiceMetrics",
@@ -144,7 +148,7 @@ class QueryFuture:
     (mirroring :class:`repro.db.Result`)."""
 
     __slots__ = ("query", "_ev", "_rows", "_counts", "_qi", "_n", "_err",
-                 "resolve_seq")
+                 "resolve_seq", "trace_id")
 
     def __init__(self, query):
         self.query = query
@@ -157,6 +161,9 @@ class QueryFuture:
         #: global resolution sequence number (set when served) — lets a
         #: caller verify its futures completed in submission order
         self.resolve_seq: int = -1
+        #: the query's trace id when a tracer was installed at submit
+        #: (joins this future to its admission/queue/serve spans)
+        self.trace_id: int | None = None
 
     def _resolve(self, rows, counts, qi: int, n: int) -> None:
         self._rows, self._counts, self._qi, self._n = rows, counts, qi, n
@@ -237,14 +244,22 @@ class ServiceMetrics:
     plan_cache: dict
     maintenance: dict | None
     health: dict
+    #: energy-ledger snapshot: per-phase joules, pJ-per-query,
+    #: pJ-per-indexed-bit, operating points (see repro.obs.energy)
+    energy: dict | None = None
 
 
 class _Item:
-    __slots__ = ("query", "future", "t", "deadline")
+    __slots__ = ("query", "future", "t", "deadline", "aspan", "qspan")
 
     def __init__(self, query, future, t, deadline=None):
         self.query, self.future, self.t = query, future, t
         self.deadline = deadline       # absolute perf_counter, or None
+        # traced submits carry their admission + live queue spans here;
+        # both are recorded in ONE batch at wave pickup, so submitter
+        # threads never contend on the tracer ring lock
+        self.aspan = None
+        self.qspan = None
 
 
 class BitmapService:
@@ -259,34 +274,62 @@ class BitmapService:
         self._inflight = 0             # accepted, not yet resolved
         self._openflag = True
         self._state = "active"
-        # --- energy meter: calibrated silicon powers, one virtual core
+        # --- energy meter: calibrated silicon powers, one virtual core.
+        # The ledger OWNS the service's EnergyReport: every joule enters
+        # through its charge(), so per-query attribution reconciles with
+        # the scheduler totals by construction.
         self._sched = ElasticScheduler(1, config.bic_config,
                                        config.power_state)
-        self._energy = EnergyReport()
+        self._ledger = EnergyLedger(self._sched)
+        self._energy = self._ledger.report
         self._elock = threading.Lock()
         self._mark = time.perf_counter()
         self._t_open = self._mark
-        # --- meters
+        # --- meters: one typed registry; metrics()/health() are views.
+        # Metric locks are leaves (never held while taking another lock),
+        # so updates are safe under the cv AND reads never deadlock.
+        self.registry = obs_metrics.Registry()
+        reg = self.registry
         self._resolve_seq = 0
-        self._lat = collections.deque(maxlen=config.latency_window)
+        self._wave_ids = itertools.count(1)
+        # bounded lifetime-uniform reservoir: p50/p99 stay stable (and
+        # memory flat) over multi-hour runs, unlike a sliding window
+        self._lat = reg.reservoir("latency_ms",
+                                  capacity=config.latency_window, seed=21)
+        self._lat_hist = reg.histogram("latency_ms_hist",
+                                       obs_metrics.LATENCY_BUCKETS_MS)
         self._batch_sizes = collections.deque(maxlen=4096)
-        self._served = 0
-        self._batches = 0
-        self._rejected = 0
-        self._standby_entries = 0
-        self._wakes = 0
-        self._spans = {"busy": 0.0, "awake": 0.0, "standby": 0.0}
+        self._served_c = reg.counter("served_total")
+        self._batches_c = reg.counter("batches_total")
+        self._rejected_c = reg.counter("rejected_total")
+        self._standby_entries_c = reg.counter("standby_entries_total")
+        self._wakes_c = reg.counter("wakes_total")
+        self._inflight_g = reg.gauge("inflight")
+        self._queue_g = reg.gauge("queue_depth")
         # --- self-healing state (see _execute)
         self._retry = RetryPolicy(max_attempts=config.wave_retries + 1,
                                   base_delay_s=config.retry_base_ms / 1e3)
         self._breaker = CircuitBreaker(
             failure_threshold=config.breaker_threshold,
             cooldown_s=config.breaker_cooldown_s)
-        self._wave_retries = 0         # transient wave failures retried
-        self._degraded_waves = 0       # waves served by the fallback
-        self._fallback_queries = 0     # queries those waves carried
-        self._deadline_rejected = 0    # futures rejected past-deadline
-        self._isolated_failures = 0    # per-query failures isolated
+        self._wave_retries_c = reg.counter(
+            "wave_retries_total", "transient wave failures retried")
+        self._degraded_waves_c = reg.counter(
+            "degraded_waves_total", "waves served by the fallback")
+        self._fallback_queries_c = reg.counter(
+            "fallback_queries_total", "queries those waves carried")
+        self._deadline_rejected_c = reg.counter(
+            "deadline_rejected_total", "futures rejected past-deadline")
+        self._isolated_failures_c = reg.counter(
+            "isolated_failures_total", "per-query failures isolated")
+        # graft the lower layers' registries: ONE exportable metric tree
+        sub = getattr(db, "registry", None)
+        if sub is not None:
+            reg.attach("db", sub)
+        store = getattr(db, "store", None)
+        if store is not None and getattr(store, "registry", None) is not None:
+            reg.attach("store", store.registry)
+        reg.attach("engine", obs_metrics.GLOBAL)
         # --- background maintenance (durable sessions only)
         self._maint = None
         self._maint_ex = None
@@ -356,6 +399,8 @@ class BitmapService:
             deadline_ms = cfg.default_deadline_ms
         deadline = (None if timeout is None
                     else time.perf_counter() + timeout)
+        tr = obs_trace.TRACER
+        t_sub = time.perf_counter() if tr is not None else 0.0
         while True:
             flush_first = False
             with self._cv:
@@ -369,7 +414,7 @@ class BitmapService:
                         # flushes here instead of deadlocking
                         flush_first = True
                     elif cfg.admission == "reject":
-                        self._rejected += 1
+                        self._rejected_c.inc()
                         raise ServiceOverloaded(
                             "queue full",
                             queue_depth=len(self._pending),
@@ -379,7 +424,7 @@ class BitmapService:
                                 else deadline - time.perf_counter())
                         if (left is not None and left <= 0) \
                                 or not self._cv.wait(timeout=left):
-                            self._rejected += 1
+                            self._rejected_c.inc()
                             raise ServiceOverloaded(
                                 f"queue full after {timeout}s "
                                 "backpressure",
@@ -390,10 +435,22 @@ class BitmapService:
                 else:
                     now = time.perf_counter()
                     fut = QueryFuture(query)
-                    self._pending.append(_Item(
-                        query, fut, now,
-                        None if deadline_ms is None
-                        else now + deadline_ms / 1e3))
+                    depth = len(self._pending)
+                    it = _Item(query, fut, now,
+                               None if deadline_ms is None
+                               else now + deadline_ms / 1e3)
+                    if tr is not None:
+                        # per-query trace: admission (submit -> accept)
+                        # then a live queue span ended at wave pickup
+                        tid = tr.new_trace()
+                        fut.trace_id = tid
+                        it.aspan = tr.make("admission", trace_id=tid,
+                                           t0=t_sub, t1=now,
+                                           queue_depth=depth)
+                        it.qspan = tr.make("queue", trace_id=tid,
+                                           parent_id=it.aspan.span_id,
+                                           t0=now)
+                    self._pending.append(it)
                     self._inflight += 1
                     self._cv.notify_all()
                     break
@@ -502,7 +559,7 @@ class BitmapService:
                 with self._elock:
                     self._charge_locked(time.perf_counter())
                 self._state = "standby"
-                self._standby_entries += 1
+                self._standby_entries_c.inc()
         self._schedule_standby_scrub()
 
     def _schedule_standby_scrub(self) -> None:
@@ -549,7 +606,7 @@ class BitmapService:
                             with self._elock:
                                 self._charge_locked(time.perf_counter())
                             self._state = "standby"
-                            self._standby_entries += 1
+                            self._standby_entries_c.inc()
                             entered_standby = True
                             break
                     else:
@@ -567,7 +624,7 @@ class BitmapService:
                     with self._elock:
                         self._charge_locked(time.perf_counter())
                     self._state = "active"
-                    self._wakes += 1
+                    self._wakes_c.inc()
                 # batch window: the OLDEST request's deadline drives it
                 deadline = self._pending[0].t + max_delay
                 while (len(self._pending) < cfg.max_batch
@@ -604,8 +661,15 @@ class BitmapService:
         # can only be a harmless over-bound for .ids — the stale
         # ordering would silently drop freshly appended matches
         n = self._db.num_records
-        rows, counts = rb.materialize()
-        jax.block_until_ready(rows)
+        tr = obs_trace.TRACER
+        if tr is None:
+            rows, counts = rb.materialize()
+            jax.block_until_ready(rows)
+        else:
+            with tr.span("device.execute", queries=len(queries),
+                         backend=backend or self._db.backend):
+                rows, counts = rb.materialize()
+                jax.block_until_ready(rows)
         return rows, counts, n
 
     def _serve_wave(self, queries: list) -> tuple[tuple | None, str]:
@@ -634,12 +698,12 @@ class BitmapService:
             return self._wave(queries, None)
 
         def on_retry(attempt, exc):
-            with self._cv:
-                self._wave_retries += 1
+            self._wave_retries_c.inc()
 
         if self._breaker.allow():
             try:
-                out = self._retry.call(preferred, seed=self._batches,
+                out = self._retry.call(preferred,
+                                       seed=self._batches_c.value,
                                        retryable=is_transient,
                                        on_retry=on_retry)
             except BaseException:               # noqa: BLE001 — ladder
@@ -668,6 +732,29 @@ class BitmapService:
             return None, "failed"
 
     def _execute(self, batch: list[_Item]) -> None:
+        tr = obs_trace.TRACER
+        if tr is None:
+            self._execute_impl(batch, None, 0)
+            return
+        # the coalesce span roots its OWN per-wave trace; each query's
+        # queue span ends here carrying wave=wid, which joins the
+        # per-query traces to the wave's coalesce/dispatch/reassembly
+        # subtree (and its serve spans carry it back)
+        wid = next(self._wave_ids)
+        t_pick = tr.clock()
+        ended = []
+        for it in batch:
+            sp = it.qspan
+            if sp is not None:
+                sp.t1 = t_pick
+                sp.attrs["wave"] = wid
+                ended.append(it.aspan)
+                ended.append(sp)
+        tr.record_batch(ended)
+        with tr.span("coalesce", wave=wid, size=len(batch)):
+            self._execute_impl(batch, tr, wid)
+
+    def _execute_impl(self, batch: list[_Item], tr, wid: int) -> None:
         with self._elock:                       # waiting span was "awake"
             self._charge_locked(time.perf_counter())
         lats: list[float] = []
@@ -697,36 +784,75 @@ class BitmapService:
                     jax.block_until_ready(r)
                     it.future._resolve(r, c, 0, self._db.num_records)
                 except BaseException as e:      # noqa: BLE001 — to future
-                    with self._cv:
-                        self._isolated_failures += 1
+                    self._isolated_failures_c.inc()
                     it.future._reject(e)
+            done = time.perf_counter()
         else:
             rows, counts, n = out
             done = time.perf_counter()
-            qi = 0
-            for it in batch:
-                self._resolve_seq += 1
-                it.future.resolve_seq = self._resolve_seq
-                if it.deadline is not None and it.deadline < now:
-                    it.future._reject(DeadlineExceeded(
-                        f"deadline budget exhausted before dispatch "
-                        f"({(now - it.t) * 1e3:.1f}ms in queue)"))
-                    continue
-                lats.append(done - it.t)
-                it.future._resolve(rows, counts, qi, n)
-                qi += 1
+            if tr is None:
+                qi = 0
+                for it in batch:
+                    self._resolve_seq += 1
+                    it.future.resolve_seq = self._resolve_seq
+                    if it.deadline is not None and it.deadline < now:
+                        it.future._reject(DeadlineExceeded(
+                            f"deadline budget exhausted before dispatch "
+                            f"({(now - it.t) * 1e3:.1f}ms in queue)"))
+                        continue
+                    lats.append(done - it.t)
+                    it.future._resolve(rows, counts, qi, n)
+                    qi += 1
+            else:
+                with tr.span("reassembly", wave=wid, size=len(batch),
+                             expired=expired):
+                    qi = 0
+                    for it in batch:
+                        self._resolve_seq += 1
+                        it.future.resolve_seq = self._resolve_seq
+                        if it.deadline is not None and it.deadline < now:
+                            it.future._reject(DeadlineExceeded(
+                                f"deadline budget exhausted before "
+                                f"dispatch ({(now - it.t) * 1e3:.1f}ms "
+                                f"in queue)"))
+                            continue
+                        lats.append(done - it.t)
+                        it.future._resolve(rows, counts, qi, n)
+                        qi += 1
         with self._elock:                       # execution span was "busy"
             self._charge_locked(time.perf_counter(), busy=True)
-        with self._cv:          # meters mutate under the cv (metrics()
-            self._lat.extend(lats)              # snapshots under it too)
-            self._served += len(batch)
-            self._batches += 1
+        # attribute THIS wave's accumulated joules across its queries
+        # (always, traced or not, so the unattributed pool drains per
+        # wave and reconcile() holds at any quiescent point)
+        served = ([it for it in batch if it.future._err is None]
+                  if mode == "failed" else live)
+        pjs = (self._ledger.attribute(
+            [it.future.trace_id or 0 for it in served])
+            if served else [])
+        if tr is not None:
+            # per-query serve span in the QUERY's trace: parented under
+            # its queue span, carrying wave/mode/pJ attribution
+            serves = []
+            for it, pj in zip(served, pjs):
+                if it.future.trace_id is None or it.qspan is None:
+                    continue        # tracer installed mid-flight
+                serves.append(tr.make(
+                    "serve", trace_id=it.future.trace_id,
+                    parent_id=it.qspan.span_id, t0=now, t1=done,
+                    wave=wid, mode=mode, pj=pj))
+            tr.record_batch(serves)
+        for v in lats:
+            self._lat.observe(v * 1e3)
+            self._lat_hist.observe(v * 1e3)
+        self._served_c.add(len(batch))
+        self._batches_c.inc()
+        self._deadline_rejected_c.add(expired)
+        if mode == "fallback":
+            self._degraded_waves_c.inc()
+            self._fallback_queries_c.add(len(live))
+        with self._cv:          # inflight gates drain(); cv-guarded
             self._batch_sizes.append(len(batch))
             self._inflight -= len(batch)
-            self._deadline_rejected += expired
-            if mode == "fallback":
-                self._degraded_waves += 1
-                self._fallback_queries += len(live)
             self._cv.notify_all()               # drain()ers
 
     # --------------------------------------------------------------- energy
@@ -739,19 +865,10 @@ class BitmapService:
         self._mark = now
         if dt <= 0:
             return
-        rep = self._energy
-        if busy:
-            rep.active_joules += self._sched.p_active * dt
-            rep.busy_core_seconds += dt
-            self._spans["busy"] += dt
-        elif self._state == "active":
-            rep.active_joules += self._sched.p_active * dt
-            rep.idle_core_seconds += dt
-            self._spans["awake"] += dt
-        else:
-            rep.standby_joules += self._sched.p_standby * dt
-            rep.idle_core_seconds += dt
-            self._spans["standby"] += dt
+        phase = ("busy" if busy
+                 else "awake_idle" if self._state == "active"
+                 else "standby")
+        self._ledger.charge(phase, dt)
 
     @property
     def energy(self) -> EnergyReport:
@@ -772,14 +889,13 @@ class BitmapService:
         store_health = store.health() if store is not None else None
         maint = (self._maint_ex.stats() if self._maint_ex is not None
                  else None)
-        with self._cv:
-            counters = {
-                "wave_retries": self._wave_retries,
-                "degraded_waves": self._degraded_waves,
-                "fallback_queries": self._fallback_queries,
-                "deadline_rejected": self._deadline_rejected,
-                "isolated_failures": self._isolated_failures,
-            }
+        counters = {
+            "wave_retries": self._wave_retries_c.value,
+            "degraded_waves": self._degraded_waves_c.value,
+            "fallback_queries": self._fallback_queries_c.value,
+            "deadline_rejected": self._deadline_rejected_c.value,
+            "isolated_failures": self._isolated_failures_c.value,
+        }
         degraded = breaker["state"] != "closed" or bool(
             store_health and store_health["quarantined"])
         return {"degraded": degraded,
@@ -793,41 +909,57 @@ class BitmapService:
                     if maint is not None else None),
                 **counters}
 
+    @property
+    def ledger(self):
+        """The service's :class:`repro.obs.energy.EnergyLedger` (owns
+        :attr:`energy`; exposes per-query pJ and ``reconcile()``)."""
+        return self._ledger
+
     def metrics(self) -> ServiceMetrics:
         with self._elock:
             self._charge_locked(time.perf_counter())
         with self._cv:          # consistent snapshot vs a live scheduler
-            lat = np.asarray(self._lat, np.float64) * 1e3
             sizes = np.asarray(self._batch_sizes, np.int64)
-            served = self._served
+            inflight = self._inflight
+            queued = len(self._pending)
+        self._inflight_g.set(inflight)
+        self._queue_g.set(queued)
+        served = self._served_c.value
         now = time.perf_counter()
         total_j = self._energy.total_joules
         maint = self._maint_ex.stats() if self._maint_ex is not None \
             else None
+        phase_s = self._ledger.phase_seconds
+        db = self._db
+        nrec = getattr(db, "num_records", 0)
+        nkeys = getattr(db, "num_keys", 0)
         return ServiceMetrics(
-            served=served, batches=self._batches, rejected=self._rejected,
-            inflight=self._inflight, state=self.state,
+            served=served, batches=self._batches_c.value,
+            rejected=self._rejected_c.value,
+            inflight=inflight, state=self.state,
             uptime_seconds=now - self._t_open,
             queries_per_sec=served / max(now - self._t_open, 1e-9),
-            latency_p50_ms=float(np.percentile(lat, 50)) if lat.size
-            else 0.0,
-            latency_p99_ms=float(np.percentile(lat, 99)) if lat.size
-            else 0.0,
-            latency_mean_ms=float(lat.mean()) if lat.size else 0.0,
+            latency_p50_ms=self._lat.percentile(50),
+            latency_p99_ms=self._lat.percentile(99),
+            latency_mean_ms=self._lat.mean,
             batch_mean=float(sizes.mean()) if sizes.size else 0.0,
             batch_max=int(sizes.max()) if sizes.size else 0,
-            busy_seconds=self._spans["busy"],
-            awake_idle_seconds=self._spans["awake"],
-            standby_seconds=self._spans["standby"],
-            standby_entries=self._standby_entries, wakes=self._wakes,
+            busy_seconds=phase_s["busy"],
+            awake_idle_seconds=phase_s["awake_idle"],
+            standby_seconds=phase_s["standby"],
+            standby_entries=self._standby_entries_c.value,
+            wakes=self._wakes_c.value,
             active_joules=self._energy.active_joules,
             standby_joules=self._energy.standby_joules,
             energy_per_query_j=total_j / served if served else 0.0,
             plan_cache=self._db.cache_stats()
             if hasattr(self._db, "cache_stats") else {},
             maintenance=maint,
-            health=self.health())
+            health=self.health(),
+            energy=self._ledger.snapshot(num_records=nrec,
+                                         num_keys=nkeys))
 
     def __repr__(self) -> str:
-        return (f"<BitmapService {self.state} served={self._served} "
+        return (f"<BitmapService {self.state} "
+                f"served={self._served_c.value} "
                 f"pending={len(self._pending)} over {self._db!r}>")

@@ -54,6 +54,8 @@ from typing import Callable, Sequence
 
 import numpy as np
 
+from repro.obs import metrics as obs_metrics
+from repro.obs.trace import maybe_span
 from repro.store import format as fmt
 from repro.store import wal as wal_mod
 from repro.store.manifest import Manifest, SegmentMeta, commit, load
@@ -203,9 +205,34 @@ class SegmentStore:
         # them and the serving layer substitutes a replica / serves
         # around until scrub() repairs or clears them.
         self._quarantined: dict[str, str] = {}
-        self.quarantine_events = 0     # lifetime quarantine entries
-        self.repairs = 0               # lifetime un-quarantines
-        self.read_retries = 0          # transient read errors retried away
+        # durability counters live in a typed registry (health() is a
+        # view over it; services attach it as their "store" subtree).
+        # The old attribute names stay readable via properties below.
+        self.registry = obs_metrics.Registry()
+        self._quarantine_events_c = self.registry.counter(
+            "quarantine_events_total", "lifetime quarantine entries")
+        self._repairs_c = self.registry.counter(
+            "repairs_total", "lifetime un-quarantines")
+        self._read_retries_c = self.registry.counter(
+            "read_retries_total", "transient read errors retried away")
+        self._segments_g = self.registry.gauge(
+            "segments", "live committed segments")
+        self._quarantined_g = self.registry.gauge(
+            "quarantined", "segments currently quarantined")
+        self._segments_g.set(len(self._manifest.segments))
+
+    # ------------------------------------------------- counter compat views
+    @property
+    def quarantine_events(self) -> int:
+        return self._quarantine_events_c.value
+
+    @property
+    def repairs(self) -> int:
+        return self._repairs_c.value
+
+    @property
+    def read_retries(self) -> int:
+        return self._read_retries_c.value
 
     # ------------------------------------------------------------- accessors
     @property
@@ -306,8 +333,7 @@ class SegmentStore:
                 attempt += 1
                 if attempt > retries:
                     raise
-                with self._lock:
-                    self.read_retries += 1
+                self._read_retries_c.inc()
                 time.sleep(0.001 * attempt)
         packed = arrays["packed"]
         if (fmeta.get("num_records") != meta.num_records
@@ -336,7 +362,8 @@ class SegmentStore:
                 return                 # superseded while we looked at it
             if meta.file not in self._quarantined:
                 self._quarantined[meta.file] = str(reason)
-                self.quarantine_events += 1
+                self._quarantine_events_c.inc()
+                self._quarantined_g.set(len(self._quarantined))
 
     def repair_segment(self, meta: SegmentMeta, packed: np.ndarray) -> None:
         """Rewrite a (quarantined) segment's file from a known-good
@@ -357,18 +384,20 @@ class SegmentStore:
                 # gc guard for the .tmp twin during the atomic rewrite
                 self._inflight.add(meta.file)
             try:
-                fmt.write_array_file(
-                    self.segment_path(meta), {"packed": packed},
-                    meta={"segment_id": meta.segment_id,
-                          "start_record": meta.start_record,
-                          "num_records": meta.num_records})
+                with maybe_span("store.repair", file=meta.file):
+                    fmt.write_array_file(
+                        self.segment_path(meta), {"packed": packed},
+                        meta={"segment_id": meta.segment_id,
+                              "start_record": meta.start_record,
+                              "num_records": meta.num_records})
             finally:
                 with self._lock:
                     self._inflight.discard(meta.file)
         self.read_segment(meta)        # verify before lifting quarantine
         with self._lock:
             self._quarantined.pop(meta.file, None)
-            self.repairs += 1          # every successful rewrite counts
+            self._quarantined_g.set(len(self._quarantined))
+        self._repairs_c.inc()          # every successful rewrite counts
 
     def scrub(self, *,
               repair: Callable[[SegmentMeta], np.ndarray | None] | None
@@ -381,6 +410,10 @@ class SegmentStore:
         clean (the corruption was read-side, not on disk) is released.
         In-flight segments are skipped — their writer owns them.
         ``dry_run=True`` only reports."""
+        with maybe_span("store.scrub", dry_run=dry_run):
+            return self._scrub_sweep(repair=repair, dry_run=dry_run)
+
+    def _scrub_sweep(self, *, repair, dry_run) -> ScrubStats:
         checked = 0
         corrupt: list[str] = []
         repaired: list[str] = []
@@ -409,10 +442,14 @@ class SegmentStore:
             else:
                 if dry_run:
                     continue
+                lifted = False
                 with self._lock:       # clean read-back lifts quarantine
                     if self._quarantined.pop(meta.file, None) is not None:
-                        self.repairs += 1
-                        repaired.append(meta.file)
+                        self._quarantined_g.set(len(self._quarantined))
+                        lifted = True
+                if lifted:
+                    self._repairs_c.inc()
+                    repaired.append(meta.file)
         return ScrubStats(checked, tuple(corrupt), tuple(repaired),
                           tuple(quarantined), dry_run)
 
@@ -473,11 +510,14 @@ class SegmentStore:
                                    num_keys=packed.shape[0])
                 self._inflight.add(meta.file)
             try:
-                fmt.write_array_file(
-                    os.path.join(self.root, meta.file), {"packed": packed},
-                    meta={"segment_id": meta.segment_id,
-                          "start_record": meta.start_record,
-                          "num_records": meta.num_records})
+                with maybe_span("store.prepare", file=meta.file,
+                                records=num_records):
+                    fmt.write_array_file(
+                        os.path.join(self.root, meta.file),
+                        {"packed": packed},
+                        meta={"segment_id": meta.segment_id,
+                              "start_record": meta.start_record,
+                              "num_records": meta.num_records})
             except BaseException:
                 with self._lock:
                     self._inflight.discard(meta.file)
@@ -554,13 +594,15 @@ class SegmentStore:
         # generation is simply current
         tick, blocks = (tick_watermark if tick_watermark is not None
                         else (m.last_tick, m.last_tick_blocks))
-        self._commit(dataclasses.replace(
-            m, version=m.version + 1,
-            segments=m.segments + (meta,),
-            wal_generation=m.wal_generation + 1,
-            next_segment_id=max(m.next_segment_id,
-                                meta.segment_id + 1),
-            last_tick=tick, last_tick_blocks=blocks))
+        with maybe_span("store.commit", file=meta.file,
+                        records=meta.num_records):
+            self._commit(dataclasses.replace(
+                m, version=m.version + 1,
+                segments=m.segments + (meta,),
+                wal_generation=m.wal_generation + 1,
+                next_segment_id=max(m.next_segment_id,
+                                    meta.segment_id + 1),
+                last_tick=tick, last_tick_blocks=blocks))
         with self._lock:
             self._inflight.discard(meta.file)
         self._flush_lock.release()
@@ -602,6 +644,7 @@ class SegmentStore:
         commit(self.root, new)
         with self._lock:
             self._manifest = new
+        self._segments_g.set(len(new.segments))
 
     # ------------------------------------------------------------ compaction
     def _tier(self, num_records: int) -> int:
@@ -645,7 +688,8 @@ class SegmentStore:
                 run = self._find_run(self._manifest.segments)
                 if run is None:
                     return stats
-                self._merge(*run, stats=stats)
+                with maybe_span("store.merge", lo=run[0], hi=run[1]):
+                    self._merge(*run, stats=stats)
 
     def _file_size(self, name: str) -> int:
         try:
@@ -734,6 +778,10 @@ class SegmentStore:
         could delete the very segment the next manifest swap commits.
         ``dry_run=True`` only reports.  Returns :class:`GCStats`
         (iterable/containment-compatible with the old filename list)."""
+        with maybe_span("store.gc", dry_run=dry_run):
+            return self._gc_sweep(dry_run=dry_run)
+
+    def _gc_sweep(self, *, dry_run) -> GCStats:
         names = sorted(os.listdir(self.root))
         removed, skipped = [], []
         reclaimed = 0
@@ -779,11 +827,13 @@ class SegmentStore:
         """Durability-side health snapshot (folded into
         ``BitmapService.health()``)."""
         with self._lock:
-            return {"quarantined": dict(self._quarantined),
-                    "quarantine_events": self.quarantine_events,
-                    "repairs": self.repairs,
-                    "read_retries": self.read_retries,
-                    "segments": len(self._manifest.segments)}
+            quarantined = dict(self._quarantined)
+            segments = len(self._manifest.segments)
+        return {"quarantined": quarantined,
+                "quarantine_events": self._quarantine_events_c.value,
+                "repairs": self._repairs_c.value,
+                "read_retries": self._read_retries_c.value,
+                "segments": segments}
 
     def close(self) -> None:
         with self._lock:

@@ -21,7 +21,17 @@ import os
 import numpy as np
 
 from repro.fault import seam
+from repro.obs import metrics as obs_metrics
 from repro.store import format as fmt
+
+# WAL traffic meters live in the process-wide registry (logs are opened
+# and handed across rotations; per-handle registries would lose counts)
+_APPENDS = obs_metrics.GLOBAL.counter(
+    "wal_appends_total", "framed block appends acked durable")
+_BYTES = obs_metrics.GLOBAL.counter(
+    "wal_bytes_total", "record payload bytes appended")
+_ROTATIONS = obs_metrics.GLOBAL.counter(
+    "wal_rotations_total", "fresh generations created by rotation")
 
 
 def wal_path(root: str, generation: int) -> str:
@@ -61,6 +71,7 @@ class WriteAheadLog:
         wal._f = open(path, "wb")
         fmt.write_log_header(wal._f)
         fmt.fsync_dir(os.path.dirname(path) or ".")
+        _ROTATIONS.inc()
         return wal
 
     def append_block(self, records: np.ndarray, start: int,
@@ -93,6 +104,8 @@ class WriteAheadLog:
             except OSError:
                 pass            # reopen-time truncation still covers it
             raise
+        _APPENDS.inc()
+        _BYTES.add(records.nbytes)
 
     def close(self) -> None:
         self._f.close()

@@ -9,9 +9,19 @@ under ``FaultPlan.random(seed, profile="all")`` — and requires:
   * bit-identical recovered state after reopening both stores from disk;
   * nothing left quarantined once the schedule drains.
 
+A second, **network** phase runs the same idea one layer up: a sharded
+fabric (loopback transports, so the ``rpc.send``/``rpc.recv`` seams fire
+without sockets) ingests and queries under
+``FaultPlan.random(seed, profile="network")`` — messages dropped,
+duplicated, delayed, and reordered — and must end with every
+acknowledged append present exactly once and every query count equal to
+the clean single-node reference (zero acked-write loss, zero wrong
+bits).
+
 Artifacts land in ``results/chaos/``: the fault schedule + fired-event
-report (``seed<N>.faults.json``) and the end-of-run service health
-(``seed<N>.health.json``) — on a CI failure these are what you read.
+report (``seed<N>.faults.json``, ``seed<N>.network.faults.json``) and
+the end-of-run service health (``seed<N>.health.json``) — on a CI
+failure these are what you read.
 
 Usage: python benchmarks/chaos.py [seed ...]      (default: 11 23 47)
 """
@@ -126,6 +136,67 @@ def run_seed(seed: int) -> list[str]:
     return failures
 
 
+def run_network_seed(seed: int) -> list[str]:
+    """The fabric phase: sharded appends + queries under the network
+    fault profile.  Every ``append_encoded`` that RETURNS is an
+    acknowledged write — the pass condition is that all of them (and
+    nothing else) are present at the end, with query counts identical
+    to a clean single-node session over the same records."""
+    from repro.db import BitmapDB
+    from repro.engine.planner import key
+    from repro.fabric.client import FabricClient
+    from repro.fabric.shardmap import ShardMap
+    from repro.fault import FaultInjector, FaultPlan
+
+    plan = FaultPlan.random(seed, profile="network", n_faults=24,
+                            max_occurrence=48, max_stall_s=0.002)
+    blocks = _blocks(13)
+    # clean single-node truth
+    ref = BitmapDB(num_keys=M)
+    for b in blocks:
+        ref.append_encoded(b)
+    truth = [ref.query(key(i)).count for i in range(M)]
+
+    # schemaless session: every column shares the key range, so a key
+    # predicate is NOT column-0-only — cardinality=0 disables pruning
+    # (routing still hashes column 0) and every query fans out
+    sm = ShardMap(num_shards=3, strategy="hash", column_index=0,
+                  base=0, cardinality=0, seed=seed)
+    fc = FabricClient.local(
+        [BitmapDB(num_keys=M) for _ in range(3)], sm,
+        max_delay_ms=1.0, request_timeout_s=0.5, request_retries=10,
+        append_retries=12)
+    failures = []
+    acked = 0
+    inj = FaultInjector(plan).install()
+    try:
+        for b in blocks:
+            acked = fc.append_encoded(b)      # returns only when acked
+            mid = [fc.submit(key(i)).count for i in range(M)]
+            if any(c > t for c, t in zip(mid, truth)):
+                failures.append("mid-run count exceeds the reference")
+        final = [fc.submit(key(i)).count for i in range(M)]
+        stored = sum(p["num_records"] for p in fc.info())
+    finally:
+        inj.uninstall()
+        fc.close()
+
+    with open(os.path.join(OUT_DIR,
+                           f"seed{seed}.network.faults.json"), "w") as f:
+        f.write(inj.report_json())
+    if acked != len(blocks) * BLOCK:
+        failures.append(f"acked {len(blocks) * BLOCK} records, fabric "
+                        f"reports {acked}")
+    if stored != len(blocks) * BLOCK:
+        failures.append(f"shards hold {stored} records, {acked} were "
+                        f"acknowledged (lost or double-applied write)")
+    if final != truth:
+        failures.append("fabric counts differ from the clean "
+                        "single-node reference (acked write lost or "
+                        "double-applied)")
+    return failures
+
+
 def main(*argv: str) -> int:
     seeds = tuple(int(a) for a in argv) or SEEDS
     os.makedirs(OUT_DIR, exist_ok=True)
@@ -134,6 +205,12 @@ def main(*argv: str) -> int:
         failures = run_seed(seed)
         status = "FAIL" if failures else "ok"
         print(f"chaos seed={seed}: {status}"
+              + "".join(f"\n  - {f}" for f in failures), flush=True)
+        bad += bool(failures)
+    for seed in seeds:
+        failures = run_network_seed(seed)
+        status = "FAIL" if failures else "ok"
+        print(f"chaos seed={seed} profile=network: {status}"
               + "".join(f"\n  - {f}" for f in failures), flush=True)
         bad += bool(failures)
     print(f"chaos smoke: {len(seeds) - bad}/{len(seeds)} seeds clean "

@@ -13,12 +13,14 @@ import sys
 
 REQUIRED = ("engine_planner_query_batched", "engine_streaming_append",
             "store_spill_recover", "db_facade_overhead",
-            "serve_microbatch", "engine_backend_sweep")
+            "serve_microbatch", "engine_backend_sweep",
+            "fabric_scaling")
 EXACTNESS_FLAGS = ("bitexact_vs_rebuild", "bitexact_recover", "bitexact",
                    "allclose", "facade_overhead_ok", "microbatch_ok",
                    "bulk_bw_ok", "bulk_not_slower_ok", "auto_ok",
                    "degraded_p99_ok", "trace_overhead_ok",
-                   "energy_reconciled")
+                   "energy_reconciled", "fabric_scaling_ok",
+                   "fabric_bitexact", "fabric_chaos_ok")
 
 
 def main(path: str = "BENCH_engine.json") -> int:

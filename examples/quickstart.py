@@ -140,6 +140,28 @@ def main():
                   f"standby={m.standby_joules:.2e}J")
             assert m.state == "standby", "idle service must clock-gate"
 
+    # ---- the fabric: the same query plane over N shard stores ----------
+    # A ShardMap hash-partitions records by their domain key; each shard
+    # is a full BitmapDB+BitmapService stack behind a transport (loopback
+    # here — `repro.fabric.worker.spawn_shards` runs the identical stack
+    # as real processes, see benchmarks/fabric.py).  The FabricClient
+    # keeps the submit()/future surface, scatters each query to the
+    # shards that can own it, and merges rows bit-identically.
+    from repro.db.expr import lower as lower_expr
+    from repro.fabric import FabricClient, ShardMap
+    sm = ShardMap(num_shards=3, strategy="hash", column_index=0,
+                  base=0, cardinality=len(DOMAINS), seed=1)
+    with FabricClient.local([repro.BitmapDB(schema) for _ in range(3)],
+                            sm) as fc:
+        fc.append(rows)
+        fut = fc.submit(q)
+        assert list(fut.ids) == want, "fabric must merge bit-identically"
+        served = [h["served"] for h in fc.metrics()["shards"]]
+        owners = sorted(sm.owners(lower_expr(q, schema)))
+        print(f"fabric: 3 hash shards served {fut.count} matches "
+              f"(per-shard served={served}, query pruned to "
+              f"shards {owners})")
+
     print("quickstart OK")
 
 

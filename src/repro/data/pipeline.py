@@ -115,6 +115,7 @@ class BitmapIndexedDataset:
         self.store_dir = store_dir
         self._shards: dict[int, tuple[np.ndarray, "object"]] = {}
         self._services: dict[int, "object"] = {}
+        self._fabric: "object | None" = None
 
     def _shard_path(self, shard_id: int) -> str:
         return os.path.join(self.store_dir, f"shard-{shard_id:04d}")
@@ -226,11 +227,51 @@ class BitmapIndexedDataset:
         synchronous path."""
         return self.service(shard_id).submit_many(list(wheres))
 
+    # ------------------------------------------------------- fabric plane
+    def fabric(self, **kw):
+        """ONE query plane over every corpus shard: a loopback
+        :class:`repro.fabric.client.FabricClient` whose shard map blocks
+        the global document-ordinal space by shard (document gid =
+        ``shard_id * docs_per_shard + local_id``).  A selection
+        submitted here scatters to every per-shard session, executes
+        coalesced on each shard's service scheduler, and merges back
+        OR-spliced — the same ``submit()``/future surface as one
+        :class:`~repro.serve.service.BitmapService`, so callers route
+        unchanged (and the same client drives REAL worker processes via
+        ``FabricClient.connect``; see benchmarks/fabric.py).  Don't
+        ingest through it: the corpus shards are append-complete by
+        construction."""
+        if self._fabric is None:
+            from repro.fabric import FabricClient, ShardMap
+            c = self.cfg
+            dbs = [self._ensure_db(s)[1] for s in range(c.num_shards)]
+            sm = ShardMap.blocked(c.num_shards,
+                                  block_size=c.docs_per_shard)
+            gids = [np.arange(s * c.docs_per_shard,
+                              (s + 1) * c.docs_per_shard, dtype=np.int64)
+                    for s in range(c.num_shards)]
+            kw.setdefault("max_delay_ms", 1.0)
+            self._fabric = FabricClient.local(dbs, sm, gids=gids, **kw)
+        return self._fabric
+
+    def select_global(self, wheres: Sequence[Query]) -> list[np.ndarray]:
+        """GLOBAL document ids (gid = shard * docs_per_shard + local)
+        matching each query, across the whole corpus in one
+        scatter/merge per micro-batch wave — equal to concatenating
+        :meth:`select` over shards with the shard offsets added."""
+        fc = self.fabric()
+        futs = fc.submit_many(list(wheres))
+        fc.drain()
+        return [np.asarray(f.ids) for f in futs]
+
     def close(self) -> None:
         """Close every shard service (drains in-flight selections)."""
         for svc in self._services.values():
             svc.close()
         self._services.clear()
+        if self._fabric is not None:
+            self._fabric.close()
+            self._fabric = None
 
     def batches(self, batch_size: int, include: Sequence[int] = (),
                 exclude: Sequence[int] = (), *, where: Query | None = None,

@@ -545,6 +545,15 @@ class MulticoreRuntime:
         self.measured_mbps = 0.0            # EWMA over non-idle ticks
         self._core_si: list[StreamingIndexer] | None = None
 
+    def bind_ledger(self, ledger: EnergyLedger) -> None:
+        """Rebind tick charging to a shared ledger (a serving stack's —
+        see :meth:`repro.serve.service.BitmapService.attach_runtime`):
+        indexing and serving then roll up into ONE energy report, and
+        the shared ledger's attributed+unattributed invariant still
+        holds because every tick's joules enter through its
+        ``charge_report``."""
+        self.ledger = ledger
+
     # ---------------------------------------------------- per-core indexes
     def core_indexers(self, keys: jax.Array) -> list[StreamingIndexer]:
         """The per-core durable indexers (created, or recovered from the

@@ -1,0 +1,58 @@
+"""`repro.fabric` — one query plane over many shard stores.
+
+The source paper scales by replicating duty-cycled cores; this package is
+the software analogue at the process level: N shard stores (each a full
+``BitmapDB`` + ``BitmapService`` stack) behind ONE submit/future query
+surface.  The pieces:
+
+  * :mod:`repro.fabric.envelope` — the typed, pickle-free wire codec and
+    the message envelope every fabric hop speaks (trace context rides in
+    the envelope, so a query's span chain crosses process boundaries);
+  * :mod:`repro.fabric.transport` — the ``Transport`` seam: an
+    in-process loopback and a framed-socket transport share one
+    request/reply contract (and the ``rpc.send``/``rpc.recv`` fault
+    seams, so chaos schedules cover the network);
+  * :mod:`repro.fabric.protocol` — ``ServiceHost``: submit / drain /
+    metrics / health / append as plain messages over a
+    :class:`repro.serve.service.BitmapService`;
+  * :mod:`repro.fabric.shardmap` — hash / block partitioning of the
+    record space, predicate pruning to owning shards;
+  * :mod:`repro.fabric.cluster` — the atomically swapped cluster
+    manifest (membership, replica groups, rebalance by segment handoff);
+  * :mod:`repro.fabric.client` — :class:`FabricClient`: the
+    ``submit()``/future facade that scatters a predicate, hedges reads
+    across replicas, and merges per-shard rows bit-identically to a
+    single-node session;
+  * :mod:`repro.fabric.worker` — the multiprocess shard worker
+    entrypoint (spawn a ``BitmapService`` + socket server per store).
+
+Imports stay lazy (the worker spawns fresh interpreters; pulling jax at
+package import would double every child's startup cost).
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "Envelope": "repro.fabric.envelope",
+    "encode": "repro.fabric.envelope",
+    "decode": "repro.fabric.envelope",
+    "ShardMap": "repro.fabric.shardmap",
+    "ClusterManifest": "repro.fabric.cluster",
+    "FabricClient": "repro.fabric.client",
+    "FabricFuture": "repro.fabric.client",
+    "ServiceHost": "repro.fabric.protocol",
+    "LoopbackTransport": "repro.fabric.transport",
+    "SocketTransport": "repro.fabric.transport",
+    "serve_socket": "repro.fabric.transport",
+    "spawn_shards": "repro.fabric.worker",
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name: str):
+    mod = _LAZY.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.fabric' has no attribute "
+                             f"{name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)

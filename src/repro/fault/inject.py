@@ -37,6 +37,13 @@ kind               effect                              sites
                    wave (transient backend failure)
 ``task_error``     ``InjectedFault`` from a           maintenance.task
                    maintenance task body
+``drop``           the message vanishes (the seam     rpc.send, rpc.recv
+                   returns ``{"drop": True}`` and
+                   the transport discards the frame)
+``duplicate``      the message is delivered twice     rpc.send, rpc.recv
+``reorder``        the message is held back and      rpc.send, rpc.recv
+                   delivered after the next one
+                   (``{"hold": True}``)
 =================  =================================  ======================
 
 Only stdlib: this module sits below everything (the seam is fired from
@@ -75,6 +82,8 @@ SITE_KINDS: dict[str, tuple[str, ...]] = {
     "wal.append": ("enospc", "stall"),
     "engine.dispatch": ("dispatch_error", "stall"),
     "maintenance.task": ("task_error", "stall"),
+    "rpc.send": ("drop", "duplicate", "reorder", "stall"),
+    "rpc.recv": ("drop", "duplicate", "reorder", "stall"),
 }
 
 
@@ -138,6 +147,9 @@ class FaultPlan:
         "serve": ("engine.dispatch", "maintenance.task", "format.read"),
         "all": ("format.write", "format.read", "log.append", "wal.append",
                 "engine.dispatch", "maintenance.task"),
+        # NOTE: rpc sites live in their own profile — folding them into
+        # "all" would shift every existing seeded schedule.
+        "network": ("rpc.send", "rpc.recv"),
     }
 
     @classmethod
@@ -295,4 +307,10 @@ class FaultInjector:
         if kind in ("dispatch_error", "task_error"):
             raise InjectedFault(f"injected {kind} at {spec.site} "
                                 f"({dict(ctx, data=None)})")
+        if kind == "drop":
+            return {"drop": True}
+        if kind == "duplicate":
+            return {"duplicate": True}
+        if kind == "reorder":
+            return {"hold": True}
         raise AssertionError(f"unhandled fault kind {kind!r}")

@@ -21,6 +21,10 @@ Known sites (the contract the fabric and the hooked modules share)::
     wal.append       path, start, size   WAL block append (pre-write)
     engine.dispatch  backend, queries    one batched wave dispatch
     maintenance.task kind                one background maintenance task
+    rpc.send         path, kind, size    one fabric envelope leaving a
+                                         transport (may return
+                                         drop/duplicate/hold directives)
+    rpc.recv         path, kind, size    one fabric envelope arriving
 """
 from __future__ import annotations
 

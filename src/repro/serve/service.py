@@ -248,6 +248,11 @@ class ServiceMetrics:
     #: pJ-per-indexed-bit, operating points (see repro.obs.energy)
     energy: dict | None = None
 
+    def to_dict(self) -> dict:
+        """Plain-dict form (what the fabric protocol puts on the wire
+        and what artifact writers serialize)."""
+        return dataclasses.asdict(self)
+
 
 class _Item:
     __slots__ = ("query", "future", "t", "deadline", "aspan", "qspan")
@@ -274,6 +279,9 @@ class BitmapService:
         self._inflight = 0             # accepted, not yet resolved
         self._openflag = True
         self._state = "active"
+        self._close_lock = threading.Lock()
+        self._flush_lock = threading.Lock()
+        self._runtime = None           # attach_runtime (shared duty cycle)
         # --- energy meter: calibrated silicon powers, one virtual core.
         # The ledger OWNS the service's EnergyReport: every joule enters
         # through its charge(), so per-query attribution reconciles with
@@ -476,23 +484,29 @@ class BitmapService:
 
     def close(self, timeout: float | None = None) -> None:
         """Drain, stop the scheduler, flush + detach background
-        maintenance.  Idempotent."""
-        with self._cv:
-            already = not self._openflag
-            self._openflag = False
-            self._cv.notify_all()
-        if not self.config.background:
-            self._flush_inline()
-        if self._thread is not None:
-            self._thread.join(timeout=timeout)
-            self._thread = None
-        if not already and self._maint is not None:
-            # detach FIRST (restores synchronous spills) so an append
-            # racing this close can never hit a closed executor
-            self._maint.detach()
-            self._maint_ex.close(timeout=timeout)
-        with self._elock:
-            self._charge_locked(time.perf_counter())
+        maintenance.  Idempotent AND safe to call concurrently — with
+        another ``close()`` (the loser waits, then no-ops) and with
+        in-flight ``submit()`` (a racing submit either wins admission
+        and resolves before the scheduler exits, or raises
+        :class:`ServiceClosed`)."""
+        with self._close_lock:
+            with self._cv:
+                already = not self._openflag
+                self._openflag = False
+                self._cv.notify_all()
+            if not self.config.background:
+                self._flush_inline()
+            if self._thread is not None:
+                self._thread.join(timeout=timeout)
+                self._thread = None
+            if not already and self._maint is not None:
+                # detach FIRST (restores synchronous spills) so an
+                # append racing this close can never hit a closed
+                # executor
+                self._maint.detach()
+                self._maint_ex.close(timeout=timeout)
+            with self._elock:
+                self._charge_locked(time.perf_counter())
 
     def warmup(self, queries: Sequence, *, max_batch: int | None = None
                ) -> int:
@@ -550,6 +564,46 @@ class BitmapService:
                     break
                 s = min(s * 2, cap)
         return dispatches
+
+    # -------------------------------------------------- shared duty cycle
+    def attach_runtime(self, runtime) -> "BitmapService":
+        """Share ONE active⇄standby duty cycle and ONE
+        :class:`~repro.obs.energy.EnergyLedger` between indexing and
+        serving: the :class:`~repro.engine.runtime.MulticoreRuntime`'s
+        tick reports charge into THIS service's ledger (so the energy
+        snapshot/pJ-per-indexed-bit roll-ups cover both), and
+        :meth:`run_tick` drives the service's power state alongside the
+        indexing tick — wake at tick start, drop back to standby when a
+        tick ends with nothing queued."""
+        with self._cv:
+            self._runtime = runtime
+        runtime.bind_ledger(self._ledger)
+        return self
+
+    def run_tick(self, records, keys, tick_seconds: float, **kw):
+        """One indexing tick through the attached runtime, synchronized
+        with the serving duty cycle (see :meth:`attach_runtime`).
+        Accepts exactly :meth:`repro.engine.runtime.MulticoreRuntime.
+        run_tick`'s arguments and returns its ``TickResult``."""
+        rt = self._runtime
+        if rt is None:
+            raise RuntimeError("no runtime attached — call "
+                               "attach_runtime(MulticoreRuntime) first")
+        wl = 0 if records is None else records.shape[0]
+        if wl:
+            with self._cv:
+                if self._state == "standby":
+                    with self._elock:
+                        self._charge_locked(time.perf_counter())
+                    self._state = "active"
+                    self._wakes_c.inc()
+        out = rt.run_tick(records, keys, tick_seconds, **kw)
+        if wl:
+            with self._cv:
+                idle = not self._pending and self._inflight == 0
+            if idle:
+                self.standby()
+        return out
 
     def standby(self) -> None:
         """Explicitly drop into standby now (the idle timer does this on
@@ -640,15 +694,20 @@ class BitmapService:
 
     def _flush_inline(self) -> None:
         """One-shot mode: run everything queued, on the calling thread,
-        in coalesced batches."""
-        while True:
-            with self._cv:
-                if not self._pending:
-                    return
-                take = min(len(self._pending), self.config.max_batch)
-                batch = [self._pending.popleft() for _ in range(take)]
-                self._cv.notify_all()
-            self._execute(batch)
+        in coalesced batches.  Serialized: concurrent one-shot
+        submitters (or a racing ``close()``) must not interleave
+        ``_execute`` — the resolve-sequence counter and the energy marks
+        assume one executor at a time."""
+        with self._flush_lock:
+            while True:
+                with self._cv:
+                    if not self._pending:
+                        return
+                    take = min(len(self._pending), self.config.max_batch)
+                    batch = [self._pending.popleft()
+                             for _ in range(take)]
+                    self._cv.notify_all()
+                self._execute(batch)
 
     def _wave(self, queries: list, backend: str | None) -> tuple:
         """One coalesced dispatch: (rows, counts, n).  ``backend=None``

@@ -7,6 +7,13 @@ key rows, `col(...)` expressions compile to fused bitmap passes, and one
 `BitmapDB` session owns ingest, durability, and query serving.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
+
+Hacking on the tree?  `PYTHONPATH=src python -m repro.analysis` runs the
+domain lint (lock hierarchy, fault-seam coverage, jit hygiene,
+span/metric taxonomy, wire exhaustiveness — see the "Static analysis"
+section of ARCHITECTURE.md); CI fails on any unbaselined finding, and
+`REPRO_LOCK_WITNESS=1 pytest` cross-checks the lock hierarchy at
+runtime.
 """
 import os
 import sys

@@ -1,0 +1,14 @@
+"""Domain-aware static analysis for the repro tree.
+
+``python -m repro.analysis`` runs five checkers — lock-order against the
+documented hierarchy, fault-seam coverage of durable I/O, JAX hygiene in
+jit bodies, span/metric taxonomy, and wire-kind exhaustiveness — plus a
+runtime lock-order witness (``repro.analysis.witness``) that
+cross-validates the static hierarchy during the test suite.  See
+ARCHITECTURE.md "Static analysis" for the baseline workflow.
+"""
+from repro.analysis.core import (Baseline, Finding, Tree, checker,  # noqa: F401
+                                 find_repo_root, run)
+
+__all__ = ["Baseline", "Finding", "Tree", "checker", "find_repo_root",
+           "run"]

@@ -1,0 +1,227 @@
+"""JAX-hygiene lint for ``engine/``: host syncs and retrace hazards
+inside jit-compiled bodies.
+
+A host sync inside a jit body (``.item()``, ``np.asarray``,
+``jax.device_get``, ``float()`` on a traced value) either fails at trace
+time or — worse — silently forces a device round-trip per call.  A
+retrace hazard (non-hashable static argument, mutable closure capture)
+turns the executor caches the batch layer depends on into per-call
+recompiles.  Both classes killed real latency budgets before; this lint
+keeps them out of the engine.
+
+What counts as a jit body:
+
+  * a function decorated ``@jax.jit`` or
+    ``@functools.partial(jax.jit, ...)`` / ``@partial(jax.jit, ...)``;
+  * a local ``def``/``lambda`` passed to a ``jax.jit(...)`` call in the
+    same module (directly or through ``jax.vmap``).
+
+``int()``/shape arithmetic on ``.shape``/``.ndim``/``len()`` is static
+under tracing and is never flagged.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Finding, Tree, checker
+
+__all__ = ["check_jax_hygiene"]
+
+_SCOPE = "src/repro/engine/"
+_HOST_NP = ("asarray", "array", "frombuffer")
+
+
+def _is_jit_expr(node) -> bool:
+    """``jax.jit`` / ``jit`` attribute or name."""
+    return (isinstance(node, ast.Attribute) and node.attr == "jit") or \
+        (isinstance(node, ast.Name) and node.id == "jit")
+
+
+def _jit_call(node) -> ast.Call | None:
+    """The ``jax.jit(...)`` call in an expression, unwrapping
+    ``functools.partial(jax.jit, ...)``."""
+    if not isinstance(node, ast.Call):
+        return None
+    if _is_jit_expr(node.func):
+        return node
+    if isinstance(node.func, ast.Attribute) and \
+            node.func.attr == "partial" or \
+            isinstance(node.func, ast.Name) and node.func.id == "partial":
+        if node.args and _is_jit_expr(node.args[0]):
+            return node
+    return None
+
+
+def _shape_static(node) -> bool:
+    """Expression derived from shapes/dtypes — static under tracing."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim",
+                                                       "dtype", "size"):
+            return True
+        if isinstance(n, ast.Call) and isinstance(n.func, ast.Name) and \
+                n.func.id == "len":
+            return True
+    return False
+
+
+class _BodyLint(ast.NodeVisitor):
+    """Flag host syncs inside one jit body."""
+
+    def __init__(self, relpath, qual, findings):
+        self.relpath = relpath
+        self.qual = qual
+        self.findings = findings
+
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "item" and not node.args:
+                self._flag(node, "host-sync", ".item()")
+            elif f.attr in _HOST_NP and isinstance(f.value, ast.Name) \
+                    and f.value.id in ("np", "numpy"):
+                self._flag(node, "host-sync", f"np.{f.attr}()")
+            elif f.attr == "device_get":
+                self._flag(node, "host-sync", "jax.device_get()")
+            elif f.attr == "block_until_ready":
+                self._flag(node, "host-sync", ".block_until_ready()")
+        elif isinstance(f, ast.Name) and f.id == "float" and node.args:
+            if not isinstance(node.args[0], ast.Constant) and \
+                    not _shape_static(node.args[0]):
+                self._flag(node, "host-sync", "float() on a traced value")
+        self.generic_visit(node)
+
+    def _flag(self, node, rule, what):
+        self.findings.append(Finding(
+            "jax", rule, self.relpath, node.lineno,
+            f"{self.qual}:{what}",
+            f"{what} inside the jit-compiled body {self.qual} forces a "
+            f"device->host sync per call"))
+
+
+def _mutable_captures(fn, enclosing_mutables) -> list[tuple[str, int]]:
+    """Free variables of ``fn`` bound to mutable literals in the
+    enclosing scope."""
+    local = {a.arg for a in fn.args.args + fn.args.kwonlyargs}
+    if getattr(fn.args, "vararg", None):
+        local.add(fn.args.vararg.arg)
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Assign):
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    local.add(t.id)
+    out = []
+    for n in ast.walk(fn):
+        if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load) and \
+                n.id not in local and n.id in enclosing_mutables:
+            out.append((n.id, n.lineno))
+    return out
+
+
+@checker("jax")
+def check_jax_hygiene(tree: Tree) -> list[Finding]:
+    findings: list[Finding] = []
+    for mod in tree.iter(_SCOPE):
+        # names of local defs jitted somewhere in this module, plus
+        # mutable-literal bindings per enclosing function
+        for scope in ast.walk(mod.tree):
+            if not isinstance(scope, (ast.Module, ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                continue
+            defs: dict[str, ast.AST] = {}
+            mutables: set[str] = set()
+            for stmt in scope.body:
+                if isinstance(stmt, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                    defs[stmt.name] = stmt
+                elif isinstance(stmt, ast.Assign) and \
+                        len(stmt.targets) == 1 and \
+                        isinstance(stmt.targets[0], ast.Name):
+                    if isinstance(stmt.value, (ast.List, ast.Dict,
+                                               ast.Set)):
+                        mutables.add(stmt.targets[0].id)
+                    elif isinstance(stmt.value, ast.Lambda):
+                        defs[stmt.targets[0].id] = stmt.value
+            qual_prefix = getattr(scope, "name", mod.relpath)
+
+            # decorated jit bodies
+            for stmt in scope.body:
+                if not isinstance(stmt, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                    continue
+                jitted = any(_jit_call(d) is not None or _is_jit_expr(d)
+                             for d in stmt.decorator_list)
+                if jitted:
+                    _lint_jit_body(mod, stmt, f"{qual_prefix}.{stmt.name}",
+                                   mutables, findings)
+                for d in stmt.decorator_list:
+                    call = _jit_call(d)
+                    if call is not None:
+                        _check_static_args(mod, stmt, call, findings)
+
+            # jax.jit(f) call sites over local defs/lambdas
+            for node in ast.walk(scope):
+                call = _jit_call(node) if isinstance(node, ast.Call) \
+                    else None
+                if call is None:
+                    continue
+                targets = call.args[1:] if not _is_jit_expr(call.func) \
+                    else call.args[:1]
+                for t in targets:
+                    body = None
+                    name = None
+                    if isinstance(t, ast.Lambda):
+                        body, name = t, "<lambda>"
+                    elif isinstance(t, ast.Name) and t.id in defs:
+                        body, name = defs[t.id], t.id
+                    elif isinstance(t, ast.Call):
+                        # jax.jit(jax.vmap(f)) — unwrap one level
+                        for a in t.args:
+                            if isinstance(a, ast.Name) and a.id in defs:
+                                body, name = defs[a.id], a.id
+                            elif isinstance(a, ast.Lambda):
+                                body, name = a, "<lambda>"
+                    if body is not None:
+                        _lint_jit_body(mod, body,
+                                       f"{qual_prefix}.{name}",
+                                       mutables, findings)
+    return findings
+
+
+def _lint_jit_body(mod, fn, qual, enclosing_mutables, findings):
+    lint = _BodyLint(mod.relpath, qual, findings)
+    body = fn.body if isinstance(fn.body, list) else [fn.body]
+    for stmt in body:
+        lint.visit(stmt)
+    if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+        for name, line in _mutable_captures(fn, enclosing_mutables):
+            findings.append(Finding(
+                "jax", "retrace-hazard", mod.relpath, line,
+                f"{qual}:{name}",
+                f"jit body {qual} closes over mutable binding {name!r}; "
+                f"mutating it silently invalidates nothing — the "
+                f"compiled executor keeps the captured snapshot"))
+
+
+def _check_static_args(mod, fn, partial_call, findings):
+    """Non-hashable static args: a static_argnames param whose default
+    is a mutable literal will raise at call time (or worse, defeat the
+    jit cache if converted)."""
+    static: set[str] = set()
+    for kw in partial_call.keywords:
+        if kw.arg in ("static_argnames", "static_argnums"):
+            for n in ast.walk(kw.value):
+                if isinstance(n, ast.Constant) and isinstance(n.value, str):
+                    static.add(n.value)
+    if not static:
+        return
+    args = fn.args
+    defaults = list(args.defaults)
+    named = args.args[len(args.args) - len(defaults):]
+    for a, d in zip(named, defaults):
+        if a.arg in static and isinstance(d, (ast.List, ast.Dict, ast.Set)):
+            findings.append(Finding(
+                "jax", "retrace-hazard", mod.relpath, d.lineno,
+                f"{fn.name}:{a.arg}",
+                f"static arg {a.arg!r} of {fn.name} defaults to a "
+                f"non-hashable literal — jit static args must be "
+                f"hashable"))

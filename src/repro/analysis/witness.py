@@ -1,0 +1,231 @@
+"""Runtime lock-order witness: the dynamic half of the lock checker.
+
+The static analyzer can only see acquisitions it can resolve; the
+runtime can only see orderings a particular run happened to execute.
+Each side validates the other: this module patches the
+``threading.Lock/RLock/Condition`` factories so every lock *created from
+repro source* is wrapped, records every observed ``(held, acquired)``
+nesting keyed by the static inventory's lock ids (creation-site
+mapping), and at teardown checks the observed pairs against the
+ARCHITECTURE.md rank table.  Run under the whole tier-1 suite
+(``REPRO_LOCK_WITNESS=1 pytest``) it turns every test into a lock-order
+probe.
+
+Locks created outside ``src/repro`` (jax internals, stdlib plumbing —
+including the RLock each wrapped ``Condition`` allocates internally)
+pass through unwrapped and unrecorded.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+
+from repro.analysis import locks as locks_mod
+from repro.analysis.core import Tree, find_repo_root
+
+__all__ = ["LockWitness", "install", "current"]
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+_REAL_CONDITION = threading.Condition
+
+
+class _Wrapped:
+    """Order-observing proxy around one lock/rlock/condition."""
+
+    __slots__ = ("_real", "_wit", "lock_id")
+
+    def __init__(self, real, wit: "LockWitness", lock_id: str):
+        self._real = real
+        self._wit = wit
+        self.lock_id = lock_id
+
+    # --- acquisition surface
+    def acquire(self, *a, **kw):
+        got = self._real.acquire(*a, **kw)
+        if got:
+            self._wit.note_acquire(self)
+        return got
+
+    def release(self):
+        self._wit.note_release(self)
+        self._real.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    # --- condition surface (only present on real conditions)
+    def wait(self, timeout=None):
+        # wait releases and reacquires the underlying lock; the witness
+        # stack keeps the cv entry (orderings observed after the wakeup
+        # still happen under the reacquired cv)
+        return self._real.wait(timeout)
+
+    def wait_for(self, predicate, timeout=None):
+        return self._real.wait_for(predicate, timeout)
+
+    def notify(self, n=1):
+        self._real.notify(n)
+
+    def notify_all(self):
+        self._real.notify_all()
+
+    def locked(self):
+        return self._real.locked()
+
+    def __getattr__(self, name):
+        return getattr(self._real, name)
+
+
+class LockWitness:
+    """Observed-nesting recorder + factory patcher."""
+
+    def __init__(self, root: str | None = None):
+        self.root = root or find_repo_root()
+        tree = Tree.load(self.root)
+        inv = locks_mod.collect_inventory(tree)
+        self.ranks = locks_mod.parse_hierarchy(tree.doc("ARCHITECTURE.md"))
+        # (abspath, line) -> lock id
+        self._sites: dict[tuple[str, int], str] = {}
+        for d in inv.values():
+            key = (os.path.normpath(os.path.join(self.root, d.relpath)),
+                   d.line)
+            self._sites[key] = d.id
+        # (outer, inner) -> (file, line, full held stack at first sighting)
+        self.pairs: dict[tuple[str, str], tuple[str, int, tuple]] = {}
+        self._pairs_lock = _REAL_LOCK()
+        self._tls = threading.local()
+        self._installed = False
+
+    # ------------------------------------------------------------- recording
+    def _stack(self) -> list:
+        st = getattr(self._tls, "stack", None)
+        if st is None:
+            st = []
+            self._tls.stack = st
+        return st
+
+    def note_acquire(self, w: _Wrapped) -> None:
+        st = self._stack()
+        if st and not any(x.lock_id == w.lock_id for x in st):
+            top = st[-1]
+            key = (top.lock_id, w.lock_id)
+            if key not in self.pairs:
+                fr = sys._getframe(1)
+                while fr is not None and \
+                        fr.f_code.co_filename == __file__:
+                    fr = fr.f_back          # skip the proxy's own frames
+                where = (fr.f_code.co_filename, fr.f_lineno) \
+                    if fr is not None else ("<unknown>", 0)
+                held = tuple(x.lock_id for x in st)
+                with self._pairs_lock:
+                    self.pairs.setdefault(key, (*where, held))
+        st.append(w)
+
+    def note_release(self, w: _Wrapped) -> None:
+        st = self._stack()
+        for i in range(len(st) - 1, -1, -1):
+            if st[i] is w:
+                del st[i]
+                break
+
+    def reset_thread(self) -> None:
+        """Drop the calling thread's held-lock context.  Test isolation
+        hook: crash-simulation tests abandon a deliberately-open
+        two-phase flush (``prepare_spill`` with no commit — the "process
+        died here" idiom), leaving that discarded store's flush lock
+        held forever.  The dead instance is not a hazard, but its stale
+        stack entry would poison every nesting this thread observes for
+        the rest of the session; the per-test fixture clears it."""
+        self._tls.stack = []
+
+    # ------------------------------------------------------------- patching
+    def _site_id(self) -> str | None:
+        """Map the creating frame (first repro-source frame up-stack) to
+        a static lock id; None -> leave the lock unwrapped."""
+        src_root = os.path.join(self.root, "src", "repro")
+        f = sys._getframe(2)
+        while f is not None:
+            fn = os.path.normpath(f.f_code.co_filename)
+            if fn.startswith(src_root):
+                lid = self._sites.get((fn, f.f_lineno))
+                if lid is None:          # tolerate small formatting drift
+                    for dl in (1, 2, -1, -2):
+                        lid = self._sites.get((fn, f.f_lineno + dl))
+                        if lid is not None:
+                            break
+                return lid
+            f = f.f_back
+        return None
+
+    def install(self) -> "LockWitness":
+        if self._installed:
+            return self
+        wit = self
+
+        def make_lock():
+            real = _REAL_LOCK()
+            lid = wit._site_id()
+            return real if lid is None else _Wrapped(real, wit, lid)
+
+        def make_rlock():
+            real = _REAL_RLOCK()
+            lid = wit._site_id()
+            return real if lid is None else _Wrapped(real, wit, lid)
+
+        def make_condition(lock=None):
+            if lock is not None and isinstance(lock, _Wrapped):
+                lock = lock._real
+            real = _REAL_CONDITION(lock)
+            lid = wit._site_id()
+            return real if lid is None else _Wrapped(real, wit, lid)
+
+        threading.Lock = make_lock
+        threading.RLock = make_rlock
+        threading.Condition = make_condition
+        self._installed = True
+        return self
+
+    def uninstall(self) -> None:
+        if self._installed:
+            threading.Lock = _REAL_LOCK
+            threading.RLock = _REAL_RLOCK
+            threading.Condition = _REAL_CONDITION
+            self._installed = False
+
+    # ------------------------------------------------------------ validation
+    def violations(self) -> list[str]:
+        """Observed nestings that contradict the documented ranks."""
+        out = []
+        with self._pairs_lock:
+            pairs = dict(self.pairs)
+        for (outer, inner), (fn, line, held) in sorted(pairs.items()):
+            ro, ri = self.ranks.get(outer), self.ranks.get(inner)
+            if ro is None or ri is None:
+                out.append(f"unranked nesting {outer} -> {inner} "
+                           f"(first seen {fn}:{line})")
+            elif ro >= ri:
+                out.append(f"rank inversion {outer} (rank {ro}) held "
+                           f"while acquiring {inner} (rank {ri}) at "
+                           f"{fn}:{line} (held: {' -> '.join(held)})")
+        return out
+
+
+_CURRENT: LockWitness | None = None
+
+
+def install(root: str | None = None) -> LockWitness:
+    global _CURRENT
+    if _CURRENT is None:
+        _CURRENT = LockWitness(root).install()
+    return _CURRENT
+
+
+def current() -> LockWitness | None:
+    return _CURRENT

@@ -207,11 +207,11 @@ class BitmapDB:
             "materialize")
 
     @property
-    def store(self):
+    def store(self) -> "SegmentStore":
         return self._si.store if self._si is not None else None
 
     @property
-    def indexer(self):
+    def indexer(self) -> "StreamingIndexer":
         """The live :class:`repro.engine.runtime.StreamingIndexer` (None
         for read-only ``from_index`` sessions) — the hook point service
         maintenance uses to move spills off the append path."""

@@ -197,7 +197,7 @@ class StreamingIndexer:
         return self._num_records
 
     @property
-    def store(self):
+    def store(self) -> "SegmentStore":
         return self._store
 
     @property
@@ -233,8 +233,8 @@ class StreamingIndexer:
             self._cap = new
 
     # ----------------------------------------------------------- durability
-    def attach_store(self, store, *, flush_records: int | None = 4096
-                     ) -> None:
+    def attach_store(self, store: "SegmentStore", *,
+                     flush_records: int | None = 4096) -> None:
         """Make this index durable: WAL-log every future append into
         ``store`` and auto-:meth:`spill` a segment whenever the in-memory
         tail reaches ``flush_records`` records (None = manual spills only).

@@ -60,7 +60,7 @@ class ServiceHost:
     and health artifacts; ``on_shutdown`` (worker processes pass one)
     runs after a ``shutdown`` envelope is acknowledged."""
 
-    def __init__(self, service, *, shard_id: int = 0,
+    def __init__(self, service: "BitmapService", *, shard_id: int = 0,
                  on_shutdown=None):
         self.service = service
         self.shard_id = shard_id

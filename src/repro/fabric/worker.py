@@ -42,6 +42,7 @@ def _shard_main(conn, shard_id: int, store_path: str | None,
     from repro.fabric.transport import serve_socket
     from repro.obs import trace as obs_trace
     from repro.serve.service import BitmapService, ServiceConfig
+    from repro.store import format as fmt
 
     tracer = None
     sink_f = None
@@ -79,15 +80,16 @@ def _shard_main(conn, shard_id: int, store_path: str | None,
     finally:
         if artifact_dir:
             try:
-                m = service.metrics().to_dict()
-                with open(os.path.join(
-                        artifact_dir,
-                        f"shard-{shard_id}-metrics.json"), "w") as f:
-                    json.dump(_jsonable(m), f, indent=2)
-                with open(os.path.join(
-                        artifact_dir,
-                        f"shard-{shard_id}-health.json"), "w") as f:
-                    json.dump(_jsonable(service.health()), f, indent=2)
+                # atomic + seamed (format.write): a fault plan can tear
+                # or drop these exactly like any other durable artifact
+                fmt.write_json_atomic(
+                    os.path.join(artifact_dir,
+                                 f"shard-{shard_id}-metrics.json"),
+                    _jsonable(service.metrics().to_dict()))
+                fmt.write_json_atomic(
+                    os.path.join(artifact_dir,
+                                 f"shard-{shard_id}-health.json"),
+                    _jsonable(service.health()))
             except Exception:           # noqa: BLE001 — artifacts only
                 pass
         server.close()

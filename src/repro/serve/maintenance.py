@@ -198,7 +198,8 @@ class IndexMaintenance:
     restores synchronous threshold spills and the store's auto
     compaction."""
 
-    def __init__(self, indexer, executor: MaintenanceExecutor):
+    def __init__(self, indexer: "StreamingIndexer",
+                 executor: MaintenanceExecutor):
         if indexer is None or indexer.store is None:
             raise ValueError("IndexMaintenance needs a store-attached "
                              "StreamingIndexer")

@@ -271,7 +271,7 @@ class BitmapService:
     """The lifecycle port (use :meth:`open`, or
     :meth:`repro.db.BitmapDB.serve`); also a context manager."""
 
-    def __init__(self, db, config: ServiceConfig):
+    def __init__(self, db: "BitmapDB", config: ServiceConfig):
         self._db = db
         self.config = config
         self._cv = threading.Condition()
@@ -377,7 +377,7 @@ class BitmapService:
         self.close()
 
     @property
-    def db(self):
+    def db(self) -> "BitmapDB":
         return self._db
 
     @property

@@ -4,3 +4,39 @@ import sys
 # Tests run on the real single CPU device — the 512-device override is
 # strictly for the dry-run (see launch/dryrun.py).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _lock_witness():
+    """Runtime lock-order witness (REPRO_LOCK_WITNESS=1): wraps every
+    lock created from repro source for the whole session, records the
+    observed (held, acquired) nestings, and fails the run if any
+    contradicts the ARCHITECTURE.md lock hierarchy.  Off by default so
+    local `pytest -x -q` stays full speed; CI turns it on."""
+    if os.environ.get("REPRO_LOCK_WITNESS") != "1":
+        yield
+        return
+    from repro.analysis import witness
+    wit = witness.install()
+    yield
+    wit.uninstall()
+    violations = wit.violations()
+    assert not violations, (
+        "lock-order witness observed nestings that contradict the "
+        "documented hierarchy:\n  " + "\n  ".join(violations))
+
+
+@pytest.fixture(autouse=True)
+def _lock_witness_isolation():
+    """Between tests, clear the probing thread's witness context: a
+    crash-simulation test that abandons an open two-phase flush leaves
+    that discarded store's lock 'held', which would otherwise poison
+    every nesting observed afterwards on this thread."""
+    yield
+    if os.environ.get("REPRO_LOCK_WITNESS") == "1":
+        from repro.analysis import witness
+        wit = witness.current()
+        if wit is not None:
+            wit.reset_thread()

@@ -1,0 +1,310 @@
+"""Tests for ``repro.analysis``: each checker against a synthetic tree
+containing exactly one planted violation (and its fixed twin), the
+runtime lock witness's pair logic, and the real tree against the
+committed baseline — the lint gate CI enforces."""
+import os
+import subprocess
+import sys
+import textwrap
+import threading
+
+import pytest
+
+from repro.analysis import Baseline, Finding, checker, find_repo_root, run
+from repro.analysis.core import default_baseline_path
+from repro.analysis import witness as witness_mod
+
+REPO_ROOT = find_repo_root(os.path.dirname(__file__))
+
+# Both machine-parsed tables, minimal: two ranked locks for the locks
+# checker, two span rows for the taxonomy checker.
+_ARCH = textwrap.dedent("""\
+    # Synthetic architecture
+
+    ## Lock hierarchy
+
+    | rank | lock | owner | may nest inside |
+    |---|---|---|---|
+    | 10 | `Outer._lock` | m.py | nothing |
+    | 20 | `Inner._lock` | m.py | rank 10 |
+
+    ## Observability
+
+    | span | scope | meaning |
+    |---|---|---|
+    | `query` | per query | one query |
+    | `flush.*` | per flush | one flush |
+    """)
+
+
+def _mk_tree(tmp_path, files: dict, arch: str = _ARCH) -> str:
+    root = tmp_path / "synthetic"
+    for rel, src in files.items():
+        p = root / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    (root / "ARCHITECTURE.md").write_text(arch)
+    return str(root)
+
+
+# ------------------------------------------------------------------- locks
+_LOCK_INVERSION = """\
+    import threading
+
+
+    class Outer:
+        def __init__(self):
+            self._lock = threading.Lock()
+
+
+    class Inner:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.outer = Outer()
+
+        def bad(self):
+            with self._lock:
+                with self.outer._lock:
+                    pass
+    """
+
+
+def test_locks_flags_planted_inversion(tmp_path):
+    root = _mk_tree(tmp_path, {"src/repro/serve/m.py": _LOCK_INVERSION})
+    found = run(root, ["locks"])
+    assert len(found) == 1, [f.render() for f in found]
+    assert found[0].rule == "inversion"
+    assert "Inner._lock" in found[0].symbol
+    assert "Outer._lock" in found[0].symbol
+
+
+def test_locks_correct_order_is_clean(tmp_path):
+    good = _LOCK_INVERSION.replace(
+        "with self._lock:\n                with self.outer._lock:",
+        "with self.outer._lock:\n                with self._lock:")
+    root = _mk_tree(tmp_path, {"src/repro/serve/m.py": good})
+    assert run(root, ["locks"]) == []
+
+
+def test_locks_flags_undocumented_lock_in_nesting(tmp_path):
+    src = """\
+        import threading
+
+
+        class Outer:
+            def __init__(self):
+                self._lock = threading.Lock()
+
+
+        class Rogue:
+            def __init__(self):
+                self._lock = threading.Lock()      # not in the table
+                self.outer = Outer()
+
+            def use(self):
+                with self.outer._lock:
+                    with self._lock:
+                        pass
+        """
+    root = _mk_tree(tmp_path, {"src/repro/serve/m.py": src})
+    found = run(root, ["locks"])
+    assert [f.rule for f in found] == ["unranked"], \
+        [f.render() for f in found]
+    assert "Rogue._lock" in found[0].symbol
+
+
+# ------------------------------------------------------------------- seams
+def test_seams_flags_raw_fsync_once(tmp_path):
+    src = """\
+        import os
+
+
+        def bad_sync(fd):
+            os.fsync(fd)
+
+
+        def good_sync(fd, seam):
+            seam.fire("store.sync")
+            os.fsync(fd)
+        """
+    root = _mk_tree(tmp_path, {"src/repro/store/badio.py": src})
+    found = run(root, ["seams"])
+    assert len(found) == 1, [f.render() for f in found]
+    assert found[0].rule == "unseamed-io"
+    assert found[0].symbol == "bad_sync:os.fsync"
+
+
+def test_seams_scope_excludes_other_layers(tmp_path):
+    src = """\
+        import os
+
+
+        def bad_sync(fd):
+            os.fsync(fd)
+        """
+    root = _mk_tree(tmp_path, {"src/repro/obs/sink.py": src})
+    assert run(root, ["seams"]) == []
+
+
+# --------------------------------------------------------------------- jax
+def test_jax_flags_host_sync_in_jit_body(tmp_path):
+    src = """\
+        import jax
+
+
+        @jax.jit
+        def bad(x):
+            return x.sum().item()
+
+
+        @jax.jit
+        def good(x):
+            return x * 2
+        """
+    root = _mk_tree(tmp_path, {"src/repro/engine/kern.py": src})
+    found = run(root, ["jax"])
+    assert len(found) == 1, [f.render() for f in found]
+    assert found[0].rule == "host-sync"
+    assert ".item()" in found[0].symbol
+    assert "bad" in found[0].symbol
+
+
+# ---------------------------------------------------------------- taxonomy
+def test_taxonomy_flags_duplicate_metric(tmp_path):
+    src = """\
+        def setup(reg):
+            reg.gauge("depth")
+            reg.histogram("depth")
+        """
+    root = _mk_tree(tmp_path, {"src/repro/serve/m.py": src})
+    found = run(root, ["taxonomy"])
+    assert len(found) == 1, [f.render() for f in found]
+    assert found[0].rule == "metric-collision"
+    assert found[0].symbol == "depth"
+
+
+def test_taxonomy_flags_undocumented_span(tmp_path):
+    src = """\
+        def probe(tr):
+            with tr.span("bogus"):
+                pass
+            with tr.span("flush.segment"):
+                pass
+        """
+    root = _mk_tree(tmp_path, {"src/repro/serve/m.py": src})
+    found = run(root, ["taxonomy"])
+    assert len(found) == 1, [f.render() for f in found]
+    assert found[0].rule == "unknown-span"
+    assert found[0].symbol == "bogus"
+
+
+# -------------------------------------------------------------------- wire
+def test_wire_flags_missing_handler(tmp_path):
+    host = """\
+        class Host:
+            def _on_query(self, env):
+                return env.reply("result")
+
+            def _on_flush(self, env):
+                return env.reply("ok")
+        """
+    cli = """\
+        from repro.fabric.envelope import Envelope
+
+
+        def drive(t):
+            t.request(Envelope("flush"))
+            t.request(Envelope("nuke"))
+            r = t.request(Envelope("query"))
+            if r.kind == "result":
+                return True
+            return r.kind == "ok"
+        """
+    root = _mk_tree(tmp_path, {"src/repro/fabric/host.py": host,
+                               "src/repro/fabric/cli.py": cli})
+    found = run(root, ["wire"])
+    assert len(found) == 1, [f.render() for f in found]
+    assert found[0].rule == "missing-handler"
+    assert found[0].symbol == "nuke"
+
+
+# ---------------------------------------------------------------- baseline
+def test_baseline_requires_reason():
+    with pytest.raises(ValueError):
+        Baseline([{"checker": "seams", "path": "x", "rule": "r",
+                   "symbol": "s", "reason": "  "}])
+
+
+def test_baseline_matches_across_line_drift():
+    bl = Baseline([{"checker": "seams", "path": "p.py", "rule": "r",
+                    "symbol": "f:os.fsync", "reason": "known"}])
+    f1 = Finding("seams", "r", "p.py", 10, "f:os.fsync", "m")
+    f2 = Finding("seams", "r", "p.py", 99, "f:os.fsync", "m")
+    unbase, supp, stale = bl.split([f1, f2])
+    assert unbase == [] and len(supp) == 2 and stale == []
+
+
+# ----------------------------------------------------------------- witness
+def _rank_extremes(wit):
+    by_rank = sorted(wit.ranks.items(), key=lambda kv: kv[1])
+    return by_rank[0][0], by_rank[-1][0]     # outermost id, innermost id
+
+
+def test_witness_flags_inverted_nesting():
+    wit = witness_mod.LockWitness(REPO_ROOT)      # no install: pure logic
+    outer_id, inner_id = _rank_extremes(wit)
+    outer = witness_mod._Wrapped(threading.Lock(), wit, outer_id)
+    inner = witness_mod._Wrapped(threading.Lock(), wit, inner_id)
+    with inner:                                   # innermost rank first...
+        with outer:                               # ...then outermost: bad
+            pass
+    assert any("rank inversion" in v for v in wit.violations())
+
+
+def test_witness_accepts_documented_order():
+    wit = witness_mod.LockWitness(REPO_ROOT)
+    outer_id, inner_id = _rank_extremes(wit)
+    outer = witness_mod._Wrapped(threading.Lock(), wit, outer_id)
+    inner = witness_mod._Wrapped(threading.Lock(), wit, inner_id)
+    with outer:
+        with inner:
+            pass
+    assert wit.violations() == []
+
+
+def test_witness_reset_thread_clears_stale_hold():
+    wit = witness_mod.LockWitness(REPO_ROOT)
+    outer_id, inner_id = _rank_extremes(wit)
+    abandoned = witness_mod._Wrapped(threading.Lock(), wit, inner_id)
+    abandoned.acquire()          # crash-simulation idiom: never released
+    wit.reset_thread()
+    other = witness_mod._Wrapped(threading.Lock(), wit, outer_id)
+    with other:
+        pass
+    assert wit.violations() == []
+
+
+# --------------------------------------------------------------- real tree
+def test_real_tree_has_zero_unbaselined_findings():
+    findings = run(REPO_ROOT)
+    bl = Baseline.load(default_baseline_path())
+    unbase, _supp, stale = bl.split(findings)
+    assert unbase == [], "\n".join(f.render() for f in unbase)
+    assert stale == [], f"stale baseline entries: {stale}"
+
+
+def test_cli_exits_zero_on_real_tree():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO_ROOT, "src")
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis"],
+        cwd=REPO_ROOT, env=env, capture_output=True, text=True,
+        timeout=300)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
+    assert "0 finding(s)" in proc.stdout
+
+
+def test_checker_registry_rejects_unknown_name(tmp_path):
+    root = _mk_tree(tmp_path, {"src/repro/serve/m.py": "x = 1\n"})
+    with pytest.raises(KeyError):
+        run(root, ["no-such-checker"])
